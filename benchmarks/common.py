@@ -1,0 +1,35 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    outs = None
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        outs = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return outs, dt
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+def small_snn_suite():
+    from repro.core import generate
+    return {
+        "model-s": generate.snn_layered(n_layers=4, width=96, fanout=8,
+                                        window=16, seed=1),
+        "model-m": generate.snn_layered(n_layers=5, width=144, fanout=10,
+                                        window=20, seed=2),
+        "rand-s": generate.snn_smallworld(n_nodes=384, fanout=10, seed=4),
+        "rand-m": generate.snn_smallworld(n_nodes=768, fanout=12, seed=5),
+    }
+
+
+def snn_constraints(name: str):
+    return (32, 128) if name.endswith("-s") else (48, 192)

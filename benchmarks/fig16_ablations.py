@@ -1,0 +1,84 @@
+"""Paper Fig. 16 + parameter studies: ablations of the three algorithmic
+contributions (neighborhood materialization, exact matching, move chaining)
+and the Pi / Theta parameter sweeps."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import row, timed
+from repro.core import generate
+from repro.core import hypergraph as H
+from repro.core.coarsen import CoarsenParams, propose
+from repro.core.partitioner import partition
+
+
+def run() -> list[str]:
+    out = []
+    hg = generate.snn_smallworld(n_nodes=320, fanout=8, seed=6)
+    om, dl = 32, 128
+
+    # warm + baseline (exact matching, chaining on, Pi=4, Theta=8)
+    base, _ = timed(partition, hg, omega=om, delta=dl, theta=8)
+    base, t_base = timed(partition, hg, omega=om, delta=dl, theta=8)
+    out.append(row("fig16/baseline", t_base * 1e6,
+                   f"conn={base.connectivity:.0f} parts={base.n_parts}"))
+
+    # --- exact vs greedy matching (ablation 2) -----------------------------
+    g, _ = timed(partition, hg, omega=om, delta=dl, theta=8,
+                 matching="greedy")
+    g, t_g = timed(partition, hg, omega=om, delta=dl, theta=8,
+                   matching="greedy")
+    out.append(row("fig16/greedy_matching", t_g * 1e6,
+                   f"conn={g.connectivity:.0f} "
+                   f"conn_ratio={g.connectivity/max(base.connectivity,1e-9):.3f} "
+                   f"levels={g.n_levels} vs {base.n_levels}"))
+
+    # --- chaining off (ablation 3: sequence by gain only) ------------------
+    c, _ = timed(partition, hg, omega=om, delta=dl, theta=8, chain_rounds=0)
+    c, t_c = timed(partition, hg, omega=om, delta=dl, theta=8,
+                   chain_rounds=0)
+    out.append(row("fig16/no_chaining", t_c * 1e6,
+                   f"conn={c.connectivity:.0f} "
+                   f"conn_ratio={c.connectivity/max(base.connectivity,1e-9):.3f}"))
+
+    # --- neighborhood materialization amortization (ablation 1) ------------
+    caps = H.Caps.for_host(hg)
+    d = H.device_from_host(hg, caps)
+    params = CoarsenParams(omega=om, delta=dl)
+    blk = jax.block_until_ready
+    pairs_fn = jax.jit(lambda dd: H.build_pairs(dd, caps))
+    nbrs_fn = jax.jit(lambda pp, dd: H.build_neighbors(pp, dd, caps))
+    prop_fn = jax.jit(lambda dd, nn, pp: propose(dd, nn, pp, caps, params))
+    pairs = blk(pairs_fn(d))
+    nbrs = blk(nbrs_fn(pairs, d))
+    blk(prop_fn(d, nbrs, pairs))
+    _, t_once = timed(lambda: blk(prop_fn(d, nbrs, pairs)))
+    _, t_dedup = timed(lambda: blk(nbrs_fn(pairs, d)))
+
+    def unmaterialized():  # re-deduplicate per proposal round (Pi rounds)
+        for _ in range(params.n_cands):
+            nn = nbrs_fn(pairs, d)
+            prop_fn(d, nn, pairs)
+        return blk(nn)
+
+    _, t_unmat = timed(unmaterialized)
+    t_mat = t_dedup + t_once
+    out.append(row("fig16/materialization", (t_unmat - t_mat) * 1e6,
+                   f"materialized={t_mat:.3f}s rebuilt_per_round={t_unmat:.3f}s "
+                   f"slowdown={t_unmat/max(t_mat,1e-9):.2f}x"))
+
+    # --- Pi sweep -----------------------------------------------------------
+    for pi in (1, 4, 16):
+        r, _ = timed(partition, hg, omega=om, delta=dl, theta=4, n_cands=pi)
+        r, t = timed(partition, hg, omega=om, delta=dl, theta=4, n_cands=pi)
+        out.append(row(f"fig16/pi_{pi}", t * 1e6,
+                       f"conn={r.connectivity:.0f} levels={r.n_levels} "
+                       f"parts={r.n_parts}"))
+
+    # --- Theta sweep ---------------------------------------------------------
+    for th in (4, 16):
+        r, _ = timed(partition, hg, omega=om, delta=dl, theta=th)
+        r, t = timed(partition, hg, omega=om, delta=dl, theta=th)
+        out.append(row(f"fig16/theta_{th}", t * 1e6,
+                       f"conn={r.connectivity:.0f}"))
+    return out

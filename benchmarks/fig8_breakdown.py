@@ -1,0 +1,87 @@
+"""Paper Fig. 8: execution-time breakdown across algorithm steps
+(candidates proposal, matching, coarse construction, gain calculation,
+sequence construction, events validity, first neighbors construction)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timed
+from repro.core import generate
+from repro.core import hypergraph as H
+from repro.core import refine as R
+from repro.core.coarsen import CoarsenParams, coarsen_step, propose
+from repro.core.contract import contract
+from repro.core.matching import match_pseudoforest
+
+
+def run() -> list[str]:
+    hg = generate.snn_smallworld(n_nodes=768, fanout=12, seed=5)
+    caps = H.Caps.for_host(hg)
+    d = H.device_from_host(hg, caps)
+    om, dl = 48, 192
+    params = CoarsenParams(omega=om, delta=dl)
+    out = []
+
+    blk = lambda x: jax.block_until_ready(x)
+
+    pairs_fn = jax.jit(lambda dd: H.build_pairs(dd, caps))
+    blk(pairs_fn(d))
+    pairs, t_pairs = timed(lambda: blk(pairs_fn(d)))
+
+    nbrs_fn = jax.jit(lambda pp, dd: H.build_neighbors(pp, dd, caps))
+    blk(nbrs_fn(pairs, d))
+    nbrs, t_nbrs = timed(lambda: blk(nbrs_fn(pairs, d)))
+
+    prop_fn = jax.jit(lambda dd, nn, pp: propose(dd, nn, pp, caps, params))
+    blk(prop_fn(d, nbrs, pairs))
+    props, t_prop = timed(lambda: blk(prop_fn(d, nbrs, pairs)))
+
+    match_fn = jax.jit(lambda t, s, l: match_pseudoforest(t, s, l))
+    live = jnp.arange(caps.n) < d.n_nodes
+    blk(match_fn(props.cand_ids[0], props.cand_scores[0], live))
+    _, t_match = timed(
+        lambda: blk(match_fn(props.cand_ids[0], props.cand_scores[0], live)))
+
+    match, _, _ = coarsen_step(d, caps, params)
+    blk(contract(d, match, caps))
+    _, t_contract = timed(lambda: blk(contract(d, match, caps)))
+
+    # refinement parts
+    kcap = 32
+    parts = jnp.arange(caps.n, dtype=jnp.int32) % 24
+    rparams = R.RefineParams(omega=om, delta=dl, theta=1)
+    pins_fn = jax.jit(lambda dd, pp: R.pins_matrix(dd, pp, caps, kcap))
+    blk(pins_fn(d, parts))
+    (pins, pins_in), t_pins = timed(lambda: blk(pins_fn(d, parts)))
+
+    gains_fn = jax.jit(lambda dd, pp, pi: R.propose_moves(
+        dd, pp, pi, caps, kcap, rparams, jnp.asarray(False), jnp.int32(24)))
+    blk(gains_fn(d, parts, pins))
+    (mv, gi, _), t_gains = timed(lambda: blk(gains_fn(d, parts, pins)))
+
+    seq_fn = jax.jit(lambda dd, pp, m, g: R.build_sequence(
+        dd, pp, m, g, caps, kcap, rparams))
+    blk(seq_fn(d, parts, mv, gi))
+    (seq, _), t_seq = timed(lambda: blk(seq_fn(d, parts, mv, gi)))
+
+    ev_fn = jax.jit(lambda dd, pp, pi, m, s, g: R.events_validity(
+        dd, pp, pi, m, s, g, caps, kcap, rparams))
+    gain_seq = R.inseq_gains(d, parts, pins, mv, gi, seq, caps, kcap)
+    blk(ev_fn(d, parts, pins_in, mv, seq, gain_seq))
+    _, t_ev = timed(lambda: blk(ev_fn(d, parts, pins_in, mv, seq, gain_seq)))
+
+    total = (t_pairs + t_nbrs + t_prop + t_match + t_contract + t_pins
+             + t_gains + t_seq + t_ev)
+    for name, t in [("first_neighbors(pairs)", t_pairs),
+                    ("first_neighbors(dedup)", t_nbrs),
+                    ("candidates_proposal", t_prop),
+                    ("nodes_matching", t_match),
+                    ("coarse_construction", t_contract),
+                    ("pins_matrix", t_pins),
+                    ("gain_calculation", t_gains),
+                    ("moves_sequence", t_seq),
+                    ("events_validity", t_ev)]:
+        out.append(row(f"fig8/{name}", t * 1e6,
+                       f"frac={t/total:.2f}"))
+    return out

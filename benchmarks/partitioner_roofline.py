@@ -1,0 +1,55 @@
+"""Roofline terms for the partitioner's own level-step programs (the
+paper's Fig. 11 analogue, derived from compiled HLO instead of measured
+counters): lower + compile coarsen_step / refine_step, walk the HLO with
+trip correction, report compute vs memory terms against v5e-class peaks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row
+from repro.core import generate
+from repro.core import hypergraph as H
+from repro.core import refine as R
+from repro.core.coarsen import CoarsenParams, coarsen_step
+from repro.launch import hlo_cost
+from repro.launch.dryrun import HBM_BW, PEAK_FLOPS
+
+
+def _terms(lowered_compiled) -> dict:
+    w = hlo_cost.analyze(lowered_compiled.as_text())
+    return dict(compute_s=w["flops"] / PEAK_FLOPS,
+                memory_s=w["bytes"] / HBM_BW,
+                flops=w["flops"], bytes=w["bytes"])
+
+
+def run() -> list[str]:
+    out = []
+    hg = generate.snn_smallworld(n_nodes=768, fanout=12, seed=5)
+    caps = H.Caps.for_host(hg)
+    d = H.device_from_host(hg, caps)
+    cp = CoarsenParams(omega=48, delta=192)
+
+    comp = jax.jit(coarsen_step, static_argnames=("caps", "params")).lower(
+        d, caps, cp).compile()
+    t = _terms(comp)
+    dom = "memory" if t["memory_s"] > t["compute_s"] else "compute"
+    out.append(row("partitioner_roofline/coarsen_step",
+                   max(t["compute_s"], t["memory_s"]) * 1e6,
+                   f"compute_ms={t['compute_s']*1e3:.3f} "
+                   f"mem_ms={t['memory_s']*1e3:.3f} bound={dom}"))
+
+    kcap = 32
+    parts = jnp.arange(caps.n, dtype=jnp.int32) % 24
+    rp = R.RefineParams(omega=48, delta=192, theta=1)
+    comp2 = jax.jit(R.refine_step,
+                    static_argnames=("caps", "kcap", "params",
+                                     "enforce_size")).lower(
+        d, parts, jnp.int32(24), caps, kcap, rp, True).compile()
+    t2 = _terms(comp2)
+    dom2 = "memory" if t2["memory_s"] > t2["compute_s"] else "compute"
+    out.append(row("partitioner_roofline/refine_step",
+                   max(t2["compute_s"], t2["memory_s"]) * 1e6,
+                   f"compute_ms={t2['compute_s']*1e3:.3f} "
+                   f"mem_ms={t2['memory_s']*1e3:.3f} bound={dom2}"))
+    return out

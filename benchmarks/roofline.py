@@ -1,0 +1,68 @@
+"""Aggregate results/dryrun/*.json into the roofline table (EXPERIMENTS.md
+section Roofline) and CSV rows for benchmarks.run."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRY = os.path.join(ROOT, "results", "dryrun")
+
+
+def load_cells() -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRY, "*.json"))):
+        try:
+            with open(path) as f:
+                cells.extend(json.load(f))
+        except Exception:
+            continue
+    return cells
+
+
+def markdown_table(cells: list[dict], mesh: str = "single") -> str:
+    hdr = ("| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+           "bottleneck | useful-FLOP ratio | roofline fraction |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for c in cells:
+        if c.get("mesh") != mesh:
+            continue
+        if c.get("status") == "skipped":
+            rows.append(f"| {c['arch']} | {c['shape']} | — | — | — | "
+                        f"skipped | — | — |")
+            continue
+        if c.get("status") != "ok":
+            continue
+        dom = max(c["compute_s"], c["memory_s"], c["collective_s"])
+        frac = c["compute_s"] / dom if dom else 0.0
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['compute_s']*1e3:.1f} | "
+            f"{c['memory_s']*1e3:.1f} | {c['collective_s']*1e3:.1f} | "
+            f"{c['dominant']} | {c['useful_flop_ratio']:.2f} | "
+            f"{frac:.2f} |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def run() -> list[str]:
+    cells = load_cells()
+    out = []
+    ok = [c for c in cells if c.get("status") == "ok"]
+    skipped = [c for c in cells if c.get("status") == "skipped"]
+    for c in ok:
+        dom = max(c["compute_s"], c["memory_s"], c["collective_s"])
+        out.append(
+            f"roofline/{c['arch']}/{c['shape']}/{c['mesh']},"
+            f"{dom*1e6:.1f},"
+            f"bound={c['dominant']} compute_ms={c['compute_s']*1e3:.1f} "
+            f"mem_ms={c['memory_s']*1e3:.1f} "
+            f"coll_ms={c['collective_s']*1e3:.1f} "
+            f"useful={c['useful_flop_ratio']:.2f}")
+    out.append(f"roofline/summary,0.0,ok={len(ok)} skipped={len(skipped)}")
+    return out
+
+
+if __name__ == "__main__":
+    cells = load_cells()
+    print(markdown_table(cells))

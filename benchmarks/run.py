@@ -1,0 +1,44 @@
+"""Benchmark driver: one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig7,fig8,...]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig7,fig8,fig15,fig16,tab2,roofline,"
+                         "proofline")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (fig7_snn_comparison, fig8_breakdown, fig15_kway,
+                            fig16_ablations, partitioner_roofline, roofline,
+                            tab2_work_span)
+    mods = {
+        "fig7": fig7_snn_comparison,
+        "fig8": fig8_breakdown,
+        "fig15": fig15_kway,
+        "fig16": fig16_ablations,
+        "tab2": tab2_work_span,
+        "roofline": roofline,
+        "proofline": partitioner_roofline,
+    }
+    want = args.only.split(",") if args.only else list(mods)
+    print("name,us_per_call,derived")
+    for key in want:
+        t0 = time.time()
+        try:
+            for line in mods[key].run():
+                print(line, flush=True)
+        except Exception as e:  # keep the harness going; report the failure
+            print(f"{key}/ERROR,0.0,{type(e).__name__}: {e}", flush=True)
+        print(f"{key}/_elapsed,{(time.time()-t0)*1e6:.0f},", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Paper Tab. II / Sec. VII-C: execution time scales linearly with pins
+(work = |N| h d dominated). We time the full pipeline across a size sweep of
+one topology family and report time-per-pin stability."""
+from __future__ import annotations
+
+from benchmarks.common import row, timed
+from repro.core import generate
+from repro.core.partitioner import partition
+
+
+def run() -> list[str]:
+    out = []
+    prev = None
+    for n in (192, 384, 640):
+        hg = generate.snn_smallworld(n_nodes=n, fanout=10, seed=3)
+        r, _ = timed(partition, hg, omega=32, delta=128, theta=4)
+        r, t = timed(partition, hg, omega=32, delta=128, theta=4)
+        pins = hg.n_pins
+        tpp = t / pins * 1e6
+        growth = ""
+        if prev is not None:
+            growth = (f"time_ratio={t/prev[0]:.2f} "
+                      f"pins_ratio={pins/prev[1]:.2f}")
+        out.append(row(f"tab2/n{n}", t * 1e6,
+                       f"pins={pins} us_per_pin={tpp:.2f} {growth}"))
+        prev = (t, pins)
+    return out

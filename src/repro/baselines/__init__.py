@@ -1,0 +1,10 @@
+"""The paper's comparison baselines (Sec. VII-A), implemented in numpy:
+
+* sequential_ml — an hMETIS-style sequential multi-level partitioner
+  adapted to the size + distinct-inbound constraints ([4, 13] in the paper)
+* overlap      — greedy incidence-overlap SNN mapper ([4])
+* onepass      — single-pass constraint-driven filler ([5])
+"""
+from repro.baselines.sequential_ml import sequential_multilevel  # noqa: F401
+from repro.baselines.overlap import overlap_partition  # noqa: F401
+from repro.baselines.onepass import onepass_partition  # noqa: F401

@@ -1,0 +1,7 @@
+"""Assigned architecture config: internvl2-2b (see registry.py for the
+exact hyperparameters and source citation)."""
+from repro.configs.registry import get_config
+
+ARCH = "internvl2-2b"
+CONFIG = get_config(ARCH)
+SMOKE = CONFIG.smoke()

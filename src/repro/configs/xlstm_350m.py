@@ -1,0 +1,7 @@
+"""Assigned architecture config: xlstm-350m (see registry.py for the
+exact hyperparameters and source citation)."""
+from repro.configs.registry import get_config
+
+ARCH = "xlstm-350m"
+CONFIG = get_config(ARCH)
+SMOKE = CONFIG.smoke()

@@ -1,0 +1,110 @@
+"""Coarse hypergraph construction (paper Sec. V-E).
+
+Clusters from `match` become coarse nodes; coarse h-edges are the images of
+fine h-edges under gamma with pins deduplicated; a pin occurring as both src
+and dst keeps only its dst role (paper: "duplicates ... are discarded from
+src(.)/out(.)"), preserving inbound-set correctness and no-self-cycle.
+
+GPU version: per-set hash-set dedup in shared+global memory, then
+prefix-sum packing. TPU adaptation: stable multi-key sort + boundary flags +
+prefix-sum compaction — identical result, deterministic, static shapes.
+Edge ids and weights are preserved level-over-level (the edge *multiset*
+keeps its identity; only pin segments shrink), exactly as in the paper.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hypergraph import Caps, DeviceHypergraph, NSENT
+from repro.utils import segops
+
+IMAX = jnp.int32(2**31 - 1)
+
+
+@partial(jax.jit, static_argnames=("caps",))
+def contract(d: DeviceHypergraph, match: jax.Array, caps: Caps):
+    """Returns (coarse DeviceHypergraph, gamma[Ncap] old->coarse id)."""
+    ids = jnp.arange(caps.n, dtype=jnp.int32)
+    live = ids < d.n_nodes
+    m_safe = jnp.clip(match, 0, caps.n - 1)
+    paired = live & (match >= 0)
+    rep = jnp.where(paired, jnp.minimum(ids, m_safe), ids)
+    is_rep = live & (rep == ids)
+    newid = (jnp.cumsum(is_rep.astype(jnp.int32)) - 1).astype(jnp.int32)
+    gamma = jnp.where(live, newid[rep], -1)
+    n_new = jnp.sum(is_rep.astype(jnp.int32))
+
+    size_new = jax.ops.segment_sum(
+        jnp.where(live, d.node_size, 0), jnp.where(live, gamma, caps.n),
+        num_segments=caps.n + 1)[: caps.n].astype(jnp.int32)
+
+    # ---- coarse edge pins: map through gamma, dedup, src-first repack ----
+    t = jnp.arange(caps.p, dtype=jnp.int32)
+    pin_live = t < d.n_pins
+    e_of = segops.rows_from_offsets(d.edge_off, caps.p, caps.e)
+    e_safe = jnp.clip(e_of, 0, caps.e - 1)
+    pin = jnp.clip(d.edge_pins, 0, caps.n - 1)
+    pprime = jnp.where(pin_live, gamma[pin], IMAX)
+    rel = t - d.edge_off[e_safe]
+    is_dst = pin_live & (rel >= d.edge_nsrc[e_safe])
+
+    k_e = jnp.where(pin_live, e_of, IMAX)
+    k_p = pprime
+    k_r = jnp.where(is_dst, 0, 1)  # dst sorts first within (e, p')
+    (se, sp, sr), _ = segops.sort_by([k_e, k_p, k_r], [jnp.zeros_like(k_e)])
+    starts = segops.segment_starts_from_sorted([se, sp])
+    keep = starts & (se != IMAX) & (sp != IMAX)
+    kept_dst = sr == 0  # first occurrence carries the merged role
+
+    c_e = jnp.where(keep, se, IMAX)
+    c_p = jnp.where(keep, sp, IMAX)
+    c_role = jnp.where(keep, jnp.where(kept_dst, 1, 0), 2)  # src=0 < dst=1
+    (fe, frole, fp), _ = segops.sort_by([c_e, c_role, c_p],
+                                        [jnp.zeros_like(c_e)])
+    pins_new = jnp.where(fe != IMAX, fp, NSENT)
+    seg_e = jnp.where(fe != IMAX, fe, caps.e)
+    counts_e = jax.ops.segment_sum(jnp.ones((caps.p,), jnp.int32), seg_e,
+                                   num_segments=caps.e + 1)[: caps.e]
+    nsrc_new = jax.ops.segment_sum(
+        jnp.where(frole == 0, 1, 0), seg_e, num_segments=caps.e + 1)[: caps.e]
+    edge_off_new = segops.offsets_from_counts(counts_e).astype(jnp.int32)
+    n_pins_new = edge_off_new[caps.e]
+
+    # ---- incidence rebuild (inbound first) -------------------------------
+    t2_live = t < n_pins_new
+    e2 = segops.rows_from_offsets(edge_off_new, caps.p, caps.e)
+    e2_safe = jnp.clip(e2, 0, caps.e - 1)
+    rel2 = t - edge_off_new[e2_safe]
+    isdst2 = t2_live & (rel2 >= nsrc_new[e2_safe])
+    node2 = jnp.where(t2_live, pins_new, IMAX)
+    inkey = jnp.where(isdst2, 0, 1)  # inbound edges first per node
+    (sn2, sk2, se2), (sin2,) = segops.sort_by(
+        [node2, inkey, jnp.where(t2_live, e2, IMAX)],
+        [isdst2.astype(jnp.int32)])
+    node_edges_new = jnp.where(sn2 != IMAX, se2, NSENT)
+    node_is_in_new = (sin2 == 1) & (sn2 != IMAX)
+    segn = jnp.where(sn2 != IMAX, sn2, caps.n)
+    counts_n = jax.ops.segment_sum(jnp.ones((caps.p,), jnp.int32), segn,
+                                   num_segments=caps.n + 1)[: caps.n]
+    nin_new = jax.ops.segment_sum(node_is_in_new.astype(jnp.int32), segn,
+                                  num_segments=caps.n + 1)[: caps.n]
+    node_off_new = segops.offsets_from_counts(counts_n).astype(jnp.int32)
+
+    d_new = DeviceHypergraph(
+        edge_off=edge_off_new,
+        edge_pins=pins_new.astype(jnp.int32),
+        edge_nsrc=nsrc_new,
+        edge_w=d.edge_w,
+        node_off=node_off_new,
+        node_edges=node_edges_new.astype(jnp.int32),
+        node_is_in=node_is_in_new,
+        node_nin=nin_new,
+        node_size=size_new,
+        n_nodes=n_new.astype(jnp.int32),
+        n_edges=d.n_edges,
+        n_pins=n_pins_new.astype(jnp.int32),
+    )
+    return d_new, gamma

@@ -1,0 +1,140 @@
+"""Synthetic hypergraph generators.
+
+The paper evaluates on (a) 12 SNN hypergraphs from [25] (Zenodo, not
+available offline) spanning regular "-model" topologies and small-world
+"-rand" ones, and (b) the ISPD98 netlists augmented 16x. We generate
+structurally matched synthetic analogues:
+
+* ``snn_layered``    — "-model"-like: layered feed-forward net, one outbound
+  h-edge (axon) per neuron whose destinations are a local window in the next
+  layer; regular, high locality, cardinality ~ fanout.
+* ``snn_smallworld`` — "-rand"-like: ring locality + random rewiring, large
+  erratic neighborhoods.
+* ``ispd_like``      — netlist-like: small cardinality (avg 3.4—4.5),
+  driver + sinks, id-window locality (placement order locality).
+* ``random_kuniform``— uniform random k-edges (property tests).
+
+All generators are deterministic in ``seed`` and return HostHypergraph with
+sources-first pin layout, unique pins, and src/dst disjoint per edge.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.hypergraph import HostHypergraph
+
+
+def _finalize(n_nodes, pin_lists, nsrc, weights) -> HostHypergraph:
+    off = np.zeros(len(pin_lists) + 1, np.int64)
+    off[1:] = np.cumsum([len(p) for p in pin_lists])
+    pins = np.concatenate(pin_lists) if pin_lists else np.zeros(0, np.int32)
+    hg = HostHypergraph(
+        n_nodes=n_nodes, edge_off=off, edge_pins=pins.astype(np.int32),
+        edge_nsrc=np.asarray(nsrc, np.int32), edge_w=np.asarray(weights, np.float32))
+    return hg
+
+
+def snn_layered(n_layers: int = 6, width: int = 256, fanout: int = 12,
+                window: int = 24, seed: int = 0,
+                weight_mode: str = "spikes") -> HostHypergraph:
+    """Feed-forward SNN: neuron (l, i) drives a window in layer l+1."""
+    rng = np.random.default_rng(seed)
+    n_nodes = n_layers * width
+    pin_lists, nsrc, weights = [], [], []
+    for l in range(n_layers - 1):
+        for i in range(width):
+            src = l * width + i
+            center = i
+            lo = max(0, center - window // 2)
+            hi = min(width, lo + window)
+            cand = np.arange(lo, hi) + (l + 1) * width
+            k = min(fanout, len(cand))
+            dst = rng.choice(cand, size=k, replace=False).astype(np.int32)
+            pin_lists.append(np.concatenate([[src], np.sort(dst)]).astype(np.int32))
+            nsrc.append(1)
+            w = rng.poisson(8.0) + 1.0 if weight_mode == "spikes" else 1.0
+            weights.append(w)
+    return _finalize(n_nodes, pin_lists, nsrc, weights)
+
+
+def snn_smallworld(n_nodes: int = 1024, fanout: int = 16, rewire: float = 0.35,
+                   seed: int = 0, weight_mode: str = "spikes") -> HostHypergraph:
+    """Ring-local axons with random long-range rewiring (small-world)."""
+    rng = np.random.default_rng(seed)
+    pin_lists, nsrc, weights = [], [], []
+    for src in range(n_nodes):
+        local = (src + 1 + np.arange(fanout * 2)) % n_nodes
+        k = fanout
+        n_far = rng.binomial(k, rewire)
+        far = rng.integers(0, n_nodes, size=n_far)
+        near = rng.choice(local, size=k - n_far, replace=False)
+        dst = np.unique(np.concatenate([near, far]).astype(np.int32))
+        dst = dst[dst != src]
+        if len(dst) == 0:
+            dst = np.array([(src + 1) % n_nodes], np.int32)
+        pin_lists.append(np.concatenate([[src], dst]).astype(np.int32))
+        nsrc.append(1)
+        w = rng.poisson(8.0) + 1.0 if weight_mode == "spikes" else 1.0
+        weights.append(w)
+    return _finalize(n_nodes, pin_lists, nsrc, weights)
+
+
+def ispd_like(n_nodes: int = 4096, n_edges: int | None = None,
+              avg_card: float = 3.8, locality: int = 64,
+              seed: int = 0) -> HostHypergraph:
+    """Netlist-like: cardinality 2 + geometric, driver + local sinks."""
+    rng = np.random.default_rng(seed)
+    if n_edges is None:
+        n_edges = int(n_nodes * 1.25)
+    pin_lists, nsrc, weights = [], [], []
+    p_geom = 1.0 / max(avg_card - 2.0, 0.25)
+    for _ in range(n_edges):
+        card = 2 + rng.geometric(min(p_geom, 1.0)) - 1
+        card = int(min(card, 24))
+        driver = int(rng.integers(0, n_nodes))
+        lo = max(0, driver - locality)
+        hi = min(n_nodes, driver + locality)
+        sinks = rng.integers(lo, hi, size=card * 2)
+        sinks = np.unique(sinks[sinks != driver])[: card - 1]
+        if len(sinks) == 0:
+            sinks = np.array([(driver + 1) % n_nodes])
+        pin_lists.append(np.concatenate([[driver], sinks]).astype(np.int32))
+        nsrc.append(1)
+        weights.append(1.0)
+    return _finalize(n_nodes, pin_lists, nsrc, weights)
+
+
+def random_kuniform(n_nodes: int, n_edges: int, k: int, seed: int = 0,
+                    n_src: int = 1, weighted: bool = False) -> HostHypergraph:
+    rng = np.random.default_rng(seed)
+    k = min(k, n_nodes)
+    n_src = min(n_src, k - 1) if k > 1 else 0
+    pin_lists, nsrc, weights = [], [], []
+    for _ in range(n_edges):
+        pins = rng.choice(n_nodes, size=k, replace=False).astype(np.int32)
+        pin_lists.append(pins)
+        nsrc.append(n_src)
+        weights.append(float(rng.integers(1, 10)) if weighted else 1.0)
+    return _finalize(n_nodes, pin_lists, nsrc, weights)
+
+
+# Named suites mirroring the paper's tables at CPU-tractable scale.
+def paper_snn_suite(scale: float = 1.0) -> dict[str, HostHypergraph]:
+    s = lambda x: max(2, int(x * scale))
+    return {
+        "model-s": snn_layered(n_layers=s(5), width=s(192), fanout=10, seed=1),
+        "model-m": snn_layered(n_layers=s(6), width=s(320), fanout=12, seed=2),
+        "model-l": snn_layered(n_layers=s(8), width=s(448), fanout=14, seed=3),
+        "rand-s": snn_smallworld(n_nodes=s(768), fanout=12, seed=4),
+        "rand-m": snn_smallworld(n_nodes=s(1536), fanout=16, seed=5),
+        "rand-l": snn_smallworld(n_nodes=s(3072), fanout=16, seed=6),
+    }
+
+
+def paper_ispd_suite(scale: float = 1.0) -> dict[str, HostHypergraph]:
+    s = lambda x: max(64, int(x * scale))
+    return {
+        "ibm01-like": ispd_like(n_nodes=s(2048), seed=11),
+        "ibm05-like": ispd_like(n_nodes=s(4096), seed=12),
+        "ibm10-like": ispd_like(n_nodes=s(8192), seed=13),
+    }

@@ -1,0 +1,357 @@
+"""Hypergraph containers: host (numpy, ragged) and device (JAX, static-capacity).
+
+The paper stores hypergraphs as two-level compressed sparse structures
+(Fig. 2): a segmented data array plus an offsets array, with h-edge pins
+stored *sources first* and node incidence stored *inbound h-edges first*,
+each with a secondary count array (``|src(e)|`` / ``|in(n)|``).
+
+We keep exactly that layout. The TPU adaptation is that device arrays are
+**capacity-padded with validity counts** (XLA needs static shapes): the
+coarsened level-(l+1) hypergraph lives in arrays of the same capacity as
+level l, with ``n_nodes/n_edges/n_pins`` giving the live prefix sizes.
+Padding lanes carry sentinels that sort to the end — the static-shape
+analogue of the paper's idle CUDA lanes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NSENT = np.int32(2**31 - 1)  # sentinel id for padding lanes
+
+
+# --------------------------------------------------------------------------
+# Host container
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class HostHypergraph:
+    """Ragged numpy hypergraph; ground-truth structure for IO / oracles."""
+
+    n_nodes: int
+    edge_off: np.ndarray    # [E+1] int64
+    edge_pins: np.ndarray   # [P]   int32 — sources first within each edge
+    edge_nsrc: np.ndarray   # [E]   int32
+    edge_w: np.ndarray      # [E]   float32
+
+    def __post_init__(self):
+        self.edge_off = np.asarray(self.edge_off, np.int64)
+        self.edge_pins = np.asarray(self.edge_pins, np.int32)
+        self.edge_nsrc = np.asarray(self.edge_nsrc, np.int32)
+        self.edge_w = np.asarray(self.edge_w, np.float32)
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.edge_w)
+
+    @property
+    def n_pins(self) -> int:
+        return int(self.edge_off[-1])
+
+    def edge(self, e: int) -> np.ndarray:
+        return self.edge_pins[self.edge_off[e]: self.edge_off[e + 1]]
+
+    def src(self, e: int) -> np.ndarray:
+        return self.edge_pins[self.edge_off[e]: self.edge_off[e] + self.edge_nsrc[e]]
+
+    def dst(self, e: int) -> np.ndarray:
+        return self.edge_pins[self.edge_off[e] + self.edge_nsrc[e]: self.edge_off[e + 1]]
+
+    def validate(self) -> None:
+        assert self.edge_off[0] == 0 and np.all(np.diff(self.edge_off) >= 0)
+        assert self.edge_pins.min(initial=0) >= 0
+        assert self.edge_pins.max(initial=-1) < self.n_nodes
+        for e in range(self.n_edges):
+            pins = self.edge(e)
+            assert len(np.unique(pins)) == len(pins), f"duplicate pin in edge {e}"
+            assert 0 <= self.edge_nsrc[e] <= len(pins)
+
+    # -- derived structure (numpy reference for incidence construction) ----
+    def incidence(self):
+        """Returns (node_off[N+1], node_edges[P], node_is_in[P], node_nin[N])
+        with inbound edges first per node, ordered by edge id within group."""
+        E, P, N = self.n_edges, self.n_pins, self.n_nodes
+        pin_edge = np.repeat(np.arange(E, dtype=np.int32),
+                             np.diff(self.edge_off).astype(np.int64))
+        rel = np.arange(P, dtype=np.int64) - self.edge_off[pin_edge]
+        is_dst = rel >= self.edge_nsrc[pin_edge]
+        order = np.lexsort((pin_edge, ~is_dst, self.edge_pins))
+        node_edges = pin_edge[order]
+        node_is_in = is_dst[order]
+        counts = np.bincount(self.edge_pins, minlength=N)
+        node_off = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+        node_nin = np.bincount(self.edge_pins[is_dst], minlength=N).astype(np.int32)
+        return node_off, node_edges, node_is_in, node_nin
+
+    def stats(self) -> dict:
+        card = np.diff(self.edge_off)
+        node_off, *_ = self.incidence()
+        deg = np.diff(node_off)
+        return dict(
+            n_nodes=self.n_nodes, n_edges=self.n_edges, n_pins=self.n_pins,
+            max_card=int(card.max(initial=0)), avg_card=float(card.mean()) if len(card) else 0.0,
+            max_deg=int(deg.max(initial=0)), avg_deg=float(deg.mean()) if len(deg) else 0.0,
+            pair_expansion=int((card.astype(np.int64) ** 2 - card).sum()),
+        )
+
+
+# --------------------------------------------------------------------------
+# Static capacities
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Caps:
+    """Static device capacities. Monotone under coarsening (coarse pins
+    dedup, so pins/pairs/neighbor totals never grow level-over-level), hence
+    one jit signature serves the entire multi-level run."""
+
+    n: int      # node capacity
+    e: int      # edge capacity
+    p: int      # pins capacity
+    pairs: int  # ordered-pin-pair expansion capacity (sum_e |e|^2 - |e|)
+    nbrs: int   # unique (node, neighbor) capacity
+    d_max: int = 0  # max h-edge cardinality (monotone non-increasing
+                    # under coarsening: coarse pins only deduplicate)
+    h0: int = 0   # level-0 max node incidence degree (kernel tile bound)
+    l0: int = 0   # level-0 max per-node traversal sum_{e in I(n)} (|e|-1)
+    u0: int = 0   # level-0 bound on unique neighbors per node
+
+    @staticmethod
+    def for_host(hg: HostHypergraph, pair_cap: int | None = None,
+                 nbr_cap: int | None = None) -> "Caps":
+        st = hg.stats()
+        pairs = int(st["pair_expansion"]) if pair_cap is None else pair_cap
+        nbrs = min(pairs, hg.n_nodes * max(1, hg.n_nodes - 1)) if nbr_cap is None else nbr_cap
+        nbrs = max(nbrs, 1)
+        # per-node traversal bound for the pair_scores kernel tiles
+        node_off, node_edges, _, _ = hg.incidence()
+        card = np.diff(hg.edge_off).astype(np.int64)
+        trav = np.maximum(card[node_edges] - 1, 0)
+        if hg.n_pins:
+            # clip: trailing isolated nodes put their offset at P itself,
+            # which reduceat rejects; where() zeroes those segments anyway
+            idx = node_off[:-1].astype(np.int64).clip(0, len(trav) - 1)
+            trav_per_node = np.add.reduceat(trav, idx)
+        else:
+            trav_per_node = np.zeros(1)
+        trav_per_node = np.where(np.diff(node_off) > 0, trav_per_node, 0)
+        l0 = int(trav_per_node.max(initial=0))
+        return Caps(n=max(hg.n_nodes, 1), e=max(hg.n_edges, 1),
+                    p=max(hg.n_pins, 1), pairs=max(pairs, 1), nbrs=nbrs,
+                    d_max=int(st["max_card"]), h0=int(st["max_deg"]),
+                    l0=max(l0, 1), u0=max(min(l0, hg.n_nodes - 1), 1))
+
+
+# --------------------------------------------------------------------------
+# Device container
+# --------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DeviceHypergraph:
+    """Capacity-padded device hypergraph (all int32/float32)."""
+
+    edge_off: jax.Array    # [Ecap+1]
+    edge_pins: jax.Array   # [Pcap]  — NSENT beyond n_pins
+    edge_nsrc: jax.Array   # [Ecap]
+    edge_w: jax.Array      # [Ecap] f32
+    node_off: jax.Array    # [Ncap+1]
+    node_edges: jax.Array  # [Pcap] — NSENT beyond n_pins
+    node_is_in: jax.Array  # [Pcap] bool
+    node_nin: jax.Array    # [Ncap]
+    node_size: jax.Array   # [Ncap] int32 cluster sizes (0 beyond n_nodes)
+    n_nodes: jax.Array     # scalar int32
+    n_edges: jax.Array
+    n_pins: jax.Array
+
+    @property
+    def ncap(self) -> int:
+        return self.node_off.shape[0] - 1
+
+    @property
+    def ecap(self) -> int:
+        return self.edge_off.shape[0] - 1
+
+    @property
+    def pcap(self) -> int:
+        return self.edge_pins.shape[0]
+
+
+def device_from_host(hg: HostHypergraph, caps: Caps) -> DeviceHypergraph:
+    node_off, node_edges, node_is_in, node_nin = hg.incidence()
+    N, E, P = hg.n_nodes, hg.n_edges, hg.n_pins
+
+    def pad(a, cap, fill, dtype):
+        out = np.full((cap,), fill, dtype=dtype)
+        out[: len(a)] = a
+        return jnp.asarray(out)
+
+    eo = np.full((caps.e + 1,), P, np.int32)
+    eo[: E + 1] = hg.edge_off
+    no = np.full((caps.n + 1,), P, np.int32)
+    no[: N + 1] = node_off
+    return DeviceHypergraph(
+        edge_off=jnp.asarray(eo),
+        edge_pins=pad(hg.edge_pins, caps.p, NSENT, np.int32),
+        edge_nsrc=pad(hg.edge_nsrc, caps.e, 0, np.int32),
+        edge_w=pad(hg.edge_w, caps.e, 0.0, np.float32),
+        node_off=jnp.asarray(no),
+        node_edges=pad(node_edges, caps.p, NSENT, np.int32),
+        node_is_in=pad(node_is_in, caps.p, False, bool),
+        node_nin=pad(node_nin, caps.n, 0, np.int32),
+        node_size=pad(np.ones(N, np.int32), caps.n, 0, np.int32),
+        n_nodes=jnp.int32(N),
+        n_edges=jnp.int32(E),
+        n_pins=jnp.int32(P),
+    )
+
+
+def host_from_device(d: DeviceHypergraph) -> HostHypergraph:
+    n_nodes = int(d.n_nodes)
+    n_edges = int(d.n_edges)
+    n_pins = int(d.n_pins)
+    return HostHypergraph(
+        n_nodes=n_nodes,
+        edge_off=np.asarray(d.edge_off)[: n_edges + 1],
+        edge_pins=np.asarray(d.edge_pins)[:n_pins],
+        edge_nsrc=np.asarray(d.edge_nsrc)[:n_edges],
+        edge_w=np.asarray(d.edge_w)[:n_edges],
+    )
+
+
+# --------------------------------------------------------------------------
+# In-jit derived structures
+# --------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PairExpansion:
+    """Flat ordered-pin-pair traversal: one entry per (edge, pin i, pin j!=i).
+
+    This is the linearization of the paper's nested traversal
+    ``forall n, forall e in I(n), forall m in e`` (Eq. 4): entry k visits
+    node n = pins[i] seeing neighbor m = pins[j] through edge e. ``slot_n``
+    is the global pin-slot of (e, i) — a unique id for the incidence pair
+    (n, e), used as the segment key for per-(n,e) reductions.
+    """
+
+    edge: jax.Array      # [L] int32 edge id (NSENT padding)
+    n: jax.Array         # [L] int32 visiting node
+    m: jax.Array         # [L] int32 seen neighbor
+    w_norm: jax.Array    # [L] f32 omega(e)/|e|
+    w: jax.Array         # [L] f32 omega(e)
+    both_dst: jax.Array  # [L] bool  n,m in dst(e)  (inter() contribution)
+    slot_n: jax.Array    # [L] int32 pin-slot of n in e  == (n,e) segment id
+    valid: jax.Array     # [L] bool
+    n_pairs: jax.Array   # scalar int32
+
+
+def build_pairs(d: DeviceHypergraph, caps: Caps) -> PairExpansion:
+    L = caps.pairs
+    ecap = d.ecap
+    card = (d.edge_off[1:] - d.edge_off[:-1]).astype(jnp.int32)  # [Ecap]
+    live_edge = jnp.arange(ecap, dtype=jnp.int32) < d.n_edges
+    card = jnp.where(live_edge, card, 0)
+    pcnt = card * jnp.maximum(card - 1, 0)
+    poff = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(pcnt)])
+    n_pairs = poff[-1]
+
+    idx = jnp.arange(L, dtype=jnp.int32)
+    e = jnp.clip(jnp.searchsorted(poff, idx, side="right").astype(jnp.int32) - 1,
+                 0, ecap - 1)
+    valid = idx < n_pairs
+    r = idx - poff[e]
+    c = jnp.maximum(card[e], 2)
+    i = r // (c - 1)
+    j0 = r % (c - 1)
+    j = j0 + (j0 >= i)
+    base = d.edge_off[e]
+    slot_n = base + i
+    slot_m = base + j
+    safe = lambda s: jnp.clip(s, 0, caps.p - 1)
+    n = jnp.where(valid, d.edge_pins[safe(slot_n)], NSENT)
+    m = jnp.where(valid, d.edge_pins[safe(slot_m)], NSENT)
+    nsrc = d.edge_nsrc[e]
+    both_dst = valid & (i >= nsrc) & (j >= nsrc)
+    wn = jnp.where(valid, d.edge_w[e] / jnp.maximum(card[e], 1), 0.0)
+    w = jnp.where(valid, d.edge_w[e], 0.0)
+    return PairExpansion(
+        edge=jnp.where(valid, e, NSENT), n=n, m=m, w_norm=wn, w=w,
+        both_dst=both_dst, slot_n=jnp.where(valid, slot_n, caps.p),
+        valid=valid, n_pairs=n_pairs)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Neighborhoods:
+    """Materialized deduplicated neighborhoods (paper Sec. V-B), CSR by node,
+    ids ascending within each node's segment (binary-searchable)."""
+
+    off: jax.Array       # [Ncap+1] int32
+    ids: jax.Array       # [NBcap] int32 neighbor ids (NSENT padding)
+    n_entries: jax.Array  # scalar int32
+
+
+def build_neighbors(pairs: PairExpansion, d: DeviceHypergraph, caps: Caps) -> Neighborhoods:
+    """Sort-dedup the pair expansion into unique (n, m) adjacency.
+
+    TPU adaptation of the paper's one-time hash-set construction: a stable
+    two-key sort + boundary flags + compaction gives the same deduplicated
+    CSR with deterministic ordering.
+    """
+    from repro.utils import segops
+
+    keyn = jnp.where(pairs.valid, pairs.n, NSENT)
+    keym = jnp.where(pairs.valid, pairs.m, NSENT)
+    (skn, skm), _ = segops.sort_by([keyn, keym], [jnp.zeros_like(keyn)])
+    starts = segops.segment_starts_from_sorted([skn, skm])
+    keep = starts & (skn != NSENT)
+    ids, n_entries = segops.scatter_compact(skm, keep, caps.nbrs, NSENT)
+    owner, _ = segops.scatter_compact(skn, keep, caps.nbrs, NSENT)
+    counts = jax.ops.segment_sum(
+        jnp.ones_like(owner), jnp.where(owner == NSENT, caps.n, owner),
+        num_segments=caps.n + 1)[: caps.n]
+    off = segops.offsets_from_counts(counts.astype(jnp.int32))
+    return Neighborhoods(off=off, ids=ids, n_entries=n_entries)
+
+
+def shrink_device(d: DeviceHypergraph, caps: Caps) -> tuple[DeviceHypergraph, Caps]:
+    """Perf iteration P1 (EXPERIMENTS.md §Perf): re-bucket capacities to the
+    next power of two above the live sizes between coarsening levels.
+
+    Baseline keeps level-0 capacities for every level (one jit signature,
+    but each level pays O(caps) work on mostly-dead lanes). Bucketing trades
+    a handful of extra compilations (one per pow2 bucket, amortized across
+    levels) for geometric work decay. Edge capacity never shrinks (edge ids
+    persist across levels, paper Sec. V-E).
+    """
+    import math as _math
+    n_live = int(d.n_nodes)
+    p_live = int(d.n_pins)
+    new_n = 1 << max(0, _math.ceil(_math.log2(max(n_live, 1))))
+    new_p = 1 << max(0, _math.ceil(_math.log2(max(p_live, 1))))
+    if new_n >= caps.n and new_p >= caps.p:
+        return d, caps
+    new_n = min(new_n, caps.n)
+    new_p = min(new_p, caps.p)
+    off_host = np.asarray(d.edge_off, dtype=np.int64)
+    card_h = off_host[1:] - off_host[:-1]
+    pair_live = int((card_h * np.maximum(card_h - 1, 0)).sum())
+    new_pairs = min(caps.pairs,
+                    1 << max(0, _math.ceil(_math.log2(max(pair_live, 1)))))
+    new_nbrs = min(caps.nbrs, new_pairs)
+    caps2 = Caps(n=new_n, e=caps.e, p=new_p, pairs=max(new_pairs, 1),
+                 nbrs=max(new_nbrs, 1), d_max=caps.d_max, h0=caps.h0,
+                 l0=caps.l0, u0=caps.u0)
+    d2 = DeviceHypergraph(
+        edge_off=d.edge_off,
+        edge_pins=d.edge_pins[:new_p],
+        edge_nsrc=d.edge_nsrc,
+        edge_w=d.edge_w,
+        node_off=d.node_off[: new_n + 1],
+        node_edges=d.node_edges[:new_p],
+        node_is_in=d.node_is_in[:new_p],
+        node_nin=d.node_nin[:new_n],
+        node_size=d.node_size[:new_n],
+        n_nodes=d.n_nodes, n_edges=d.n_edges, n_pins=d.n_pins,
+    )
+    return d2, caps2

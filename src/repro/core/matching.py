@@ -1,0 +1,175 @@
+"""Exact maximum-weight matching on the candidate-pair pseudo-forest.
+
+Faithful JAX port of paper Sec. V-D: every node proposes ``target(n)`` with
+``score(n)``; the proposal graph is a functional pseudo-forest whose cycles
+are 2-cycles (score symmetry + id tie-break). We compute the exact DP
+(Eq. 7-12): a bottom-up sweep accumulating, per node,
+
+  sum0(n)   = sum of ss0 over finalized non-root children,
+  best(n)   = max over children of ss1-0 (value, id) with larger-id tie-break
+              — the functional analogue of the paper's atomic lexicographic
+              max claim,
+
+followed by 2-cycle root settlement (Eq. 8/11) and a top-down resolution
+sweep (Eq. 12). Both sweeps are ``lax.while_loop`` wavefronts whose trip
+count is the tree height — the same span the paper reports (S = height,
+treated as ~1).
+
+Robustness beyond the paper: when later proposal rounds (pi > 1) or
+floating-point asymmetry break the 2-cycle invariant, the wavefront can
+stall on a longer cycle. We then deterministically cut the outgoing edge of
+every stalled node whose (score, id) key is smaller than its target's —
+at least one such edge exists on any cycle, so progress is guaranteed; the
+cut node becomes a tree root. Round 1 under exact symmetry never stalls, so
+the paper's exactness claim is preserved where it applies.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+NEG = jnp.float32(-jnp.inf)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class _State:
+    done: jax.Array
+    cnt: jax.Array
+    sum0: jax.Array
+    bestval: jax.Array
+    bestid: jax.Array
+    has_parent: jax.Array  # child edge still present (False once cut)
+    stall_guard: jax.Array
+
+
+def _seg_best(values, ids, seg, num, valid):
+    """(max value, larger-id tie-break) per segment; (-inf, -1) if empty."""
+    v = jnp.where(valid, values, NEG)
+    mx = jax.ops.segment_max(v, seg, num_segments=num)
+    mx = jnp.nan_to_num(mx, neginf=float("-inf"))
+    hit = valid & (v == mx[seg]) & ~jnp.isneginf(v)
+    arg = jax.ops.segment_max(jnp.where(hit, ids, -1), seg, num_segments=num)
+    return mx, arg
+
+
+def match_pseudoforest(target: jax.Array, score: jax.Array,
+                       live: jax.Array) -> jax.Array:
+    """Returns match[Ncap] int32: partner id, or -1 if unmatched.
+
+    target: proposed partner per node (-1 = no proposal). score: eta of the
+    proposal. live: mask of nodes participating in this round.
+    """
+    ncap = target.shape[0]
+    ids = jnp.arange(ncap, dtype=jnp.int32)
+
+    tgt_live = live & (target >= 0) & live[jnp.clip(target, 0, ncap - 1)]
+    target = jnp.where(tgt_live, target, -1)
+    t_safe = jnp.clip(target, 0, ncap - 1)
+
+    # 2-cycle roots (paper: all cycles have length two under the invariant)
+    root_pair = tgt_live & (target[t_safe] == ids)
+    seg_parent = jnp.where(tgt_live, target, ncap)  # ncap = drop bucket
+
+    cnt0 = jax.ops.segment_sum(
+        jnp.where(tgt_live & ~root_pair, 1, 0), seg_parent,
+        num_segments=ncap + 1)[:ncap].astype(jnp.int32)
+
+    st = _State(
+        done=~live,
+        cnt=cnt0,
+        sum0=jnp.zeros((ncap,), jnp.float32),
+        bestval=jnp.full((ncap,), NEG),
+        bestid=jnp.full((ncap,), -1, jnp.int32),
+        has_parent=tgt_live & ~root_pair,
+        stall_guard=jnp.int32(0),
+    )
+
+    def pending(s):
+        return live & ~s.done & ~root_pair
+
+    def cond(s):
+        return jnp.any(pending(s))
+
+    def body(s):
+        pend = pending(s)
+        ready = pend & (s.cnt == 0)
+        any_ready = jnp.any(ready)
+
+        ss0_r = s.sum0 + jnp.maximum(0.0, jnp.where(jnp.isneginf(s.bestval),
+                                                    0.0, s.bestval))
+        ss1_r = score + s.sum0
+        push = ready & s.has_parent
+        seg = jnp.where(push, target, ncap)
+        sum0 = s.sum0 + jax.ops.segment_sum(
+            jnp.where(push, ss0_r, 0.0), seg, num_segments=ncap + 1)[:ncap]
+        val = ss1_r - ss0_r
+        nv, ni = _seg_best(val, ids, seg, ncap + 1, push)
+        nv, ni = nv[:ncap], ni[:ncap]
+        better = (nv > s.bestval) | ((nv == s.bestval) & (ni > s.bestid))
+        bestval = jnp.where(better, nv, s.bestval)
+        bestid = jnp.where(better, ni, s.bestid)
+        # parent bookkeeping: every finalized child (pushed or cut) ticks cnt
+        seg_all = jnp.where(ready & tgt_live & ~root_pair, target, ncap)
+        cnt = s.cnt - jax.ops.segment_sum(
+            jnp.ones((ncap,), jnp.int32), seg_all, num_segments=ncap + 1)[:ncap]
+        done = s.done | ready
+
+        # stall => deterministic cycle cut (key(n) < key(target(n)))
+        def do_cut(s_cut):
+            k_lt = (score < score[t_safe]) | (
+                (score == score[t_safe]) & (ids < target))
+            cut = pend & ~ready & k_lt & s_cut.has_parent
+            # a cut child no longer blocks nor feeds its parent
+            segc = jnp.where(cut, target, ncap)
+            cntc = s_cut.cnt - jax.ops.segment_sum(
+                jnp.ones((ncap,), jnp.int32), segc,
+                num_segments=ncap + 1)[:ncap]
+            return dataclasses.replace(
+                s_cut, cnt=cntc, has_parent=s_cut.has_parent & ~cut,
+                stall_guard=s_cut.stall_guard + 1)
+
+        new = _State(done=done, cnt=cnt, sum0=sum0, bestval=bestval,
+                     bestid=bestid, has_parent=s.has_parent,
+                     stall_guard=s.stall_guard)
+        return jax.lax.cond(any_ready, lambda x: x, do_cut, new)
+
+    st = jax.lax.while_loop(cond, body, st)
+
+    # ---- root settlement --------------------------------------------------
+    ss0 = st.sum0 + jnp.maximum(0.0, jnp.where(jnp.isneginf(st.bestval),
+                                               0.0, st.bestval))
+    best_ok = (st.bestid >= 0) & (st.bestval >= 0.0)
+    best_or_none = jnp.where(best_ok, st.bestid, -1)
+
+    partner = t_safe
+    ss1_root = score + st.sum0 + st.sum0[partner]          # Eq. 8
+    pairup = root_pair & (ss1_root > ss0 + ss0[partner])   # Eq. 11
+    match = jnp.full((ncap,), -1, jnp.int32)
+    match = jnp.where(root_pair, jnp.where(pairup, target, best_or_none), match)
+
+    treeroot = live & ~st.has_parent & ~root_pair  # includes cut + undefined
+    match = jnp.where(treeroot, best_or_none, match)
+    resolved = ~live | root_pair | treeroot
+
+    # ---- top-down resolution (Eq. 12) --------------------------------------
+    def cond2(c):
+        resolved, match = c
+        return jnp.any(~resolved)
+
+    def body2(c):
+        resolved, match = c
+        ready = ~resolved & resolved[t_safe]
+        claimed = match[t_safe] == ids
+        m_new = jnp.where(claimed, target, best_or_none)
+        match = jnp.where(ready, m_new, match)
+        return resolved | ready, match
+
+    _, match = jax.lax.while_loop(cond2, body2, (resolved, match))
+
+    # drop non-mutual entries (a node whose chosen child was claimed upstream)
+    m_safe = jnp.clip(match, 0, ncap - 1)
+    mutual = (match >= 0) & (match[m_safe] == ids)
+    return jnp.where(mutual, match, -1)

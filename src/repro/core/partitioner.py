@@ -1,0 +1,124 @@
+"""Multi-level partitioner driver (paper Sec. III, Fig. 1).
+
+Coarsen level-by-level (clusters capped at 2 nodes per level) until the
+minimum valid partition count ceil(|N|/Omega) is reached or no further valid
+clusters can be built; the coarsest clusters ARE the initial partitions
+(score/connectivity duality, Eq. 2 vs Eq. 1); then uncoarsen with Theta
+refinement repetitions per level.
+
+Host Python drives the level loop (the level count is data-dependent, as on
+GPU where the host launches kernels per level); every level step is one
+fused jit at a single static capacity signature, so the whole run compiles
+exactly once per input bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics
+from repro.core.contract import contract
+from repro.core.coarsen import CoarsenParams, coarsen_step
+from repro.core.hypergraph import (Caps, HostHypergraph, device_from_host)
+from repro.core.refine import RefineParams, refine_level
+
+
+@dataclasses.dataclass
+class PartitionResult:
+    parts: np.ndarray          # [N] partition id per node
+    n_parts: int
+    n_levels: int
+    connectivity: float
+    cut_net: float
+    audit: dict
+    timings: dict
+    level_log: list
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, math.ceil(math.log2(max(1, x))))
+
+
+def partition(hg: HostHypergraph, omega: int, delta: int,
+              n_cands: int = 4, theta: int = 16, use_kernels: bool = False,
+              refine_params: RefineParams | None = None,
+              max_levels: int = 64, collect_log: bool = False,
+              kcap_hint: int | None = None,
+              matching: str = "exact",
+              chain_rounds: int = 16,
+              bucket: bool = False) -> PartitionResult:
+    """Full multi-level constrained partitioning (paper's SNN mode).
+
+    bucket=True enables pow2 capacity re-bucketing between levels (perf
+    iteration P1; see EXPERIMENTS.md §Perf) — identical results, coarse
+    levels run on geometrically shrinking arrays.
+    """
+    from repro.core.hypergraph import shrink_device
+
+    t0 = time.perf_counter()
+    caps = Caps.for_host(hg)
+    d = device_from_host(hg, caps)
+    cparams = CoarsenParams(omega=omega, delta=delta, n_cands=n_cands,
+                            use_kernels=use_kernels, matching=matching)
+
+    target = max(1, math.ceil(hg.n_nodes / omega))
+    levels, gammas = [], []
+    log: list = []
+    t_coarsen = time.perf_counter()
+    while int(d.n_nodes) > target and len(gammas) < max_levels:
+        match, n_pairs, _ = coarsen_step(d, caps, cparams)
+        if int(n_pairs) == 0:
+            break
+        d2, gamma = contract(d, match, caps)
+        if collect_log:
+            log.append(dict(kind="coarsen", level=len(gammas),
+                            nodes=int(d.n_nodes), pairs=int(n_pairs),
+                            caps_n=caps.n))
+        levels.append((d, caps))
+        gammas.append(gamma)
+        d = d2
+        if bucket:
+            d, caps = shrink_device(d, caps)
+    t_coarsen = time.perf_counter() - t_coarsen
+
+    # initial partitioning == coarsest clusters (Sec. III)
+    k = int(d.n_nodes)
+    kcap = kcap_hint or _next_pow2(k)
+    parts = jnp.where(jnp.arange(caps.n) < k,
+                      jnp.arange(caps.n, dtype=jnp.int32), 0)
+
+    rparams = refine_params or RefineParams(
+        omega=omega, delta=delta, theta=theta, use_kernels=use_kernels,
+        chain_rounds=chain_rounds)
+
+    t_refine = time.perf_counter()
+    rlog: list | None = [] if collect_log else None
+    # refine the coarsest level too, then every uncoarsened level
+    parts = refine_level(d, parts, k, caps, kcap, rparams, rlog)
+    for lvl in range(len(levels) - 1, -1, -1):
+        g = gammas[lvl]
+        d_lvl, caps_lvl = levels[lvl]
+        coarse_cap = parts.shape[0]
+        parts = jnp.where(jnp.arange(caps_lvl.n) < d_lvl.n_nodes,
+                          parts[jnp.clip(g[: caps_lvl.n], 0,
+                                         coarse_cap - 1)], 0)
+        parts = refine_level(d_lvl, parts, k, caps_lvl, kcap, rparams, rlog)
+        if collect_log:
+            log.append(dict(kind="refine", level=lvl))
+    t_refine = time.perf_counter() - t_refine
+
+    parts_np = np.asarray(parts)[: hg.n_nodes].astype(np.int64)
+    # compact partition ids (refinement may empty some partitions)
+    uniq, parts_np = np.unique(parts_np, return_inverse=True)
+    aud = metrics.audit(hg, parts_np, omega=omega, delta=delta)
+    return PartitionResult(
+        parts=parts_np, n_parts=len(uniq), n_levels=len(gammas),
+        connectivity=aud["connectivity"], cut_net=aud["cut_net"], audit=aud,
+        timings=dict(total=time.perf_counter() - t0, coarsen=t_coarsen,
+                     refine=t_refine),
+        level_log=(log or []) + (rlog or []))

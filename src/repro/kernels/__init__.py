@@ -1,0 +1,28 @@
+"""Pallas TPU kernels for the partitioner's compute hot spots.
+
+The paper's dominant kernels (Fig. 8) are the two neighborhood traversals:
+candidate-pairs proposal (coarsening) and refinement gain calculation, plus
+the pins(p,e) matrix precomputation that feeds the latter. Each kernel here
+is the TPU-native redesign of the corresponding CUDA kernel:
+
+  pins_count  — shared-memory atomic counters      -> one-hot compare+reduce
+                over VMEM tiles, grid-accumulated across cardinality chunks.
+  pair_scores — warp shared-memory histogram with
+                per-pin binary search (Fig. 3)      -> dense equality-matmul:
+                eta[t,u] = sum_l w[t,l] * (trav[t,l] == nbr[t,u]), with the
+                inter() counter accumulated from a dst-flag plane in the
+                same pass (the paper's in-histogram constraint tracking).
+  gains       — warp-per-node gain loops over the
+                pins matrix                         -> scalar-prefetch grid:
+                the incidence list is prefetched and drives the BlockSpec
+                index_map that streams pins-matrix columns from HBM.
+  flash_attn  — framework-side hot spot (EXPERIMENTS.md SPerf M-series):
+                online-softmax attention with the score block and running
+                max/denominator resident in VMEM, grid-accumulated over
+                key chunks; HBM traffic collapses to q/k/v/o.
+
+Each subpackage ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper + padding/layout glue) and ref.py (pure-jnp oracle). All kernels
+validate in interpret mode on CPU; tests sweep shapes and dtypes against
+the oracles.
+"""

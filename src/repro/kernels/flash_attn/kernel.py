@@ -1,0 +1,95 @@
+"""Flash attention Pallas kernel — the M-series §Perf follow-up.
+
+The pure-XLA chunked attention (models/layers.flash_attention) streams
+q_chunk x k_chunk score blocks through HBM at fusion boundaries; the
+roofline shows that traffic dominating every *_32k cell. This kernel keeps
+the online-softmax state and the score block in VMEM — HBM traffic drops to
+q/k/v/o (+small m/l side outputs), the fused-kernel ideal.
+
+Layout: MHA [BH, S, D] (the ops wrapper expands GQA groups). Grid
+(BH, nq, nk), k-chunks innermost; the output block and the running max /
+denominator revisit across the k dimension and accumulate in place
+(same grid-accumulation idiom as kernels/pins_count). Final normalization
+(acc / l) happens outside — it fuses with the caller's projection.
+
+  q   : [BH, S, D]  block (1, qc, D) idx (b, i, 0->i)
+  k,v : [BH, S, D]  block (1, kc, D) idx (b, j)
+  acc : f32[BH, S, D]  block (1, qc, D) idx (b, i)   (accumulated)
+  m,l : f32[BH, S]     block (1, qc)   idx (b, i)    (running max / denom)
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30  # python float: jnp constants would be captured by the kernel
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, qc: int, kc: int):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                                    # [qc, D]
+    k = k_ref[0]                                    # [kc, D]
+    s = jnp.dot(q.astype(jnp.float32), k.astype(jnp.float32).T) * scale
+    if causal:
+        qpos = i * qc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0)
+        kpos = j * kc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
+        s = jnp.where(qpos >= kpos, s, NEG)
+
+    m_prev = m_ref[0]                               # [qc]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[0] = l_ref[0] * corr + jnp.sum(p, axis=1)
+    acc_ref[0] = (acc_ref[0] * corr[:, None]
+                  + jnp.dot(p, v_ref[0].astype(jnp.float32)))
+    m_ref[0] = m_new
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "qc", "kc", "scale",
+                                    "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, qc: int = 128,
+                           kc: int = 128, scale: float | None = None,
+                           interpret: bool = True):
+    """q/k/v: [BH, S, D]. Returns [BH, S, D] (same dtype as q)."""
+    bh, s, d = q.shape
+    qc = math.gcd(min(qc, s), s)
+    kc = math.gcd(min(kc, s), s)
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    grid = (bh, s // qc, s // kc)
+    kern = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                             qc=qc, kc=kc)
+    acc, m, l = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, qc, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, kc, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kc, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, qc, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, qc), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, qc), lambda b, i, j: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh, s), jnp.float32),
+            jax.ShapeDtypeStruct((bh, s), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)

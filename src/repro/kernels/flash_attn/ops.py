@@ -1,0 +1,25 @@
+"""GQA-aware wrapper: [B,S,H,Dh] x [B,S,KV,Dh] -> kernel MHA layout."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.kernel import flash_attention_pallas
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def flash_attention_gqa(q, k, v, *, causal: bool = True, qc: int = 128,
+                        kc: int = 128, scale: float | None = None):
+    """q [B,S,H,Dh], k/v [B,S,KV,Dh] -> [B,S,H,Dh]."""
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qm = jnp.transpose(q, (0, 2, 1, 3)).reshape(b * h, s, dh)
+    krep = jnp.repeat(k, g, axis=2)
+    vrep = jnp.repeat(v, g, axis=2)
+    km = jnp.transpose(krep, (0, 2, 1, 3)).reshape(b * h, s, dh)
+    vm = jnp.transpose(vrep, (0, 2, 1, 3)).reshape(b * h, s, dh)
+    out = flash_attention_pallas(qm, km, vm, causal=causal, qc=qc, kc=kc,
+                                 scale=scale, interpret=INTERPRET)
+    return jnp.transpose(out.reshape(b, h, s, dh), (0, 2, 1, 3))

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash_attn kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        scale: float | None = None):
+    """q/k/v: [BH, S, D]."""
+    bh, s_len, d = q.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s_len, s_len), bool))
+        s = jnp.where(mask[None], s, -jnp.inf)
+    a = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", a,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,60 @@
+"""Refinement gain kernel: conn_w[n, p] = sum_{e in I(n)} w(e)*[pins(p,e)>0].
+
+CUDA original (Sec. VI-B): a warp per node allocates one gain variable per
+partition in shared memory and streams the node's incident h-edges, reading
+pins(p, e) columns. TPU redesign: the irregular gather of pins columns is
+expressed with a *scalar-prefetched* grid — the node incidence list (edge
+ids) is prefetched into SMEM and drives the BlockSpec index_map, so the
+pins-matrix row for edge e = inc[n, j] is DMA-streamed from HBM while the
+previous column accumulates. This is the idiomatic TPU analogue of the
+paper's warp-sequential incident-edge loop (span = h), with the partition
+axis vectorized across lanes.
+
+  grid     = (N, H)                      (node-major, incidence-minor)
+  inc      : int32[N*H] scalar-prefetch  (edge id per slot; pad -> row 0)
+  w        : f32[N, H]   block (1, 1)    (pad slots carry w = 0)
+  pins_nz  : f32[E, K]   block (1, K)    idx (i, j) -> (inc[i*H+j], 0)
+  conn     : f32[N, K]   block (1, K)    idx (i, j) -> (i, 0)   (accum)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gains_kernel(inc_ref, w_ref, pins_ref, conn_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        conn_ref[...] = jnp.zeros_like(conn_ref)
+
+    conn_ref[...] += w_ref[0, 0] * pins_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("h", "interpret"))
+def gains_pallas(inc: jax.Array, w: jax.Array, pins_nz: jax.Array,
+                 h: int, interpret: bool = True):
+    """inc: [N*H] int32 edge ids (pad slots -> 0 with w 0). w: [N, H] f32.
+    pins_nz: [E, K] f32 (1.0 where pins(p,e) > 0). Returns conn [N, K]."""
+    n = w.shape[0]
+    e, k = pins_nz.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n, h),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, inc_ref: (i, j)),
+            pl.BlockSpec((1, k), lambda i, j, inc_ref: (inc_ref[i * h + j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k), lambda i, j, inc_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gains_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=interpret,
+    )(inc, w, pins_nz)

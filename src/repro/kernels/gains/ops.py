@@ -1,0 +1,53 @@
+"""jit'd wrapper: node incidence CSR + pins matrix -> gains kernel.
+
+Drop-in for the conn_w computation in `refine.propose_moves`. The incidence
+tile bound H comes from level-0 Caps (same fallback contract as
+pair_scores/ops.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hypergraph import Caps, DeviceHypergraph
+from repro.utils import segops
+from repro.kernels.gains.kernel import gains_pallas
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((max(x, 1) + m - 1) // m) * m
+
+
+def h_bound(caps: Caps) -> int:
+    return _round_up(caps.h0, 8)
+
+
+def fits_kernel(d: DeviceHypergraph, caps: Caps) -> jax.Array:
+    deg = d.node_off[1:] - d.node_off[:-1]
+    ids = jnp.arange(caps.n)
+    return jnp.max(jnp.where(ids < d.n_nodes, deg, 0)) <= h_bound(caps)
+
+
+def conn_weights(d: DeviceHypergraph, parts: jax.Array, pins: jax.Array,
+                 caps: Caps, kcap: int):
+    """conn_w[n, p] = sum_{e in I(n)} w(e) * [pins(p, e) > 0], [Ncap, kcap]."""
+    H = h_bound(caps)
+    npad = _round_up(caps.n, 8)
+    t = jnp.arange(caps.p, dtype=jnp.int32)
+    live = t < d.n_pins
+    n_of = segops.rows_from_offsets(d.node_off, caps.p, caps.n)
+    n_safe = jnp.clip(n_of, 0, caps.n - 1)
+    rank = t - d.node_off[n_safe]
+    ok = live & (n_of < caps.n) & (rank < H)
+    pos = jnp.where(ok, n_safe * H + rank, npad * H)
+    e_ids = jnp.clip(d.node_edges, 0, caps.e - 1)
+    inc = jnp.zeros((npad * H + 1,), jnp.int32).at[pos].set(
+        e_ids, mode="drop")[:-1]
+    w = jnp.zeros((npad * H + 1,), jnp.float32).at[pos].set(
+        jnp.where(live, d.edge_w[e_ids], 0.0), mode="drop")[:-1]
+    w = w.reshape(npad, H)
+    pins_nz = (pins > 0).astype(jnp.float32).T  # [Ecap, kcap]
+    conn = gains_pallas(inc, w, pins_nz, h=H, interpret=INTERPRET)
+    return conn[: caps.n]

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the gains kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gains_ref(inc, w, pins_nz, h: int):
+    """inc [N*H] edge ids, w [N,H], pins_nz [E,K]. conn[n,k] =
+    sum_j w[n,j] * pins_nz[inc[n,j], k]."""
+    n = w.shape[0]
+    cols = pins_nz[inc.reshape(n, h)]        # [N, H, K]
+    return jnp.sum(w[:, :, None] * cols, axis=1).astype(jnp.float32)

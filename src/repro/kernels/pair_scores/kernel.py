@@ -1,0 +1,82 @@
+"""Candidate-pairs scoring kernel: the paper's hottest kernel (Fig. 8).
+
+CUDA original (Sec. V-C, Fig. 3): one warp per node; a batch of the node's
+materialized unique neighbors is staged in shared memory as histogram bins;
+threads stream the node's incident h-edges' pins and binary-search their
+bin, accumulating eta(n,m) += w(e)/|e| — and, in the same bin, the
+inbound-set intersection counter inter(n,m) whenever both endpoints are
+destinations of the h-edge.
+
+TPU redesign: binary search + scattered bin increments do not map to the
+VPU. Instead the histogram *is* a dense equality-reduce over the node's
+padded traversal against its padded unique-neighbor slots:
+
+    eta[t, u]   = sum_l w[t, l]   * (trav[t, l] == nbr[t, u])
+    inter[t, u] = sum_l dst[t, l] * (trav[t, l] == nbr[t, u])
+
+The grid walks (node tiles x traversal chunks); nbr slots play the role of
+the shared-memory batch (they live in VMEM for the whole row of chunks),
+and the traversal chunks stream through exactly like the paper's pin
+batches. Both planes accumulate in one pass — the constraint counter is
+free, as in the paper.
+
+  grid   = (N/TN, L/LC)
+  nbr    : int32[N, U]    (pad -1)        block (TN, U)  idx (i, 0)
+  trav_m : int32[N, L]    (pad -2)        block (TN, LC) idx (i, j)
+  trav_w : f32[N, L]                      block (TN, LC) idx (i, j)
+  trav_d : int32[N, L]                    block (TN, LC) idx (i, j)
+  eta    : f32[N, U]                      block (TN, U)  idx (i, 0)  (accum)
+  inter  : i32[N, U]                      block (TN, U)  idx (i, 0)  (accum)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pair_scores_kernel(nbr_ref, m_ref, w_ref, d_ref, eta_ref, inter_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        eta_ref[...] = jnp.zeros_like(eta_ref)
+        inter_ref[...] = jnp.zeros_like(inter_ref)
+
+    nbr = nbr_ref[...]                     # [TN, U]
+    m = m_ref[...]                         # [TN, LC]
+    eq = m[:, :, None] == nbr[:, None, :]  # [TN, LC, U]
+    eta_ref[...] += jnp.sum(eq * w_ref[...][:, :, None], axis=1)
+    inter_ref[...] += jnp.sum(eq * d_ref[...][:, :, None], axis=1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tn", "lc", "interpret"))
+def pair_scores_pallas(nbr: jax.Array, trav_m: jax.Array, trav_w: jax.Array,
+                       trav_d: jax.Array, tn: int = 8, lc: int = 128,
+                       interpret: bool = True):
+    n, u = nbr.shape
+    _, l = trav_m.shape
+    assert n % tn == 0 and l % lc == 0, (n, l, tn, lc)
+    grid = (n // tn, l // lc)
+    return pl.pallas_call(
+        _pair_scores_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, u), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, lc), lambda i, j: (i, j)),
+            pl.BlockSpec((tn, lc), lambda i, j: (i, j)),
+            pl.BlockSpec((tn, lc), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tn, u), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, u), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, u), jnp.float32),
+            jax.ShapeDtypeStruct((n, u), jnp.int32),
+        ],
+        interpret=interpret,
+    )(nbr, trav_m, trav_w, trav_d.astype(jnp.int32))

@@ -1,0 +1,96 @@
+"""jit'd wrapper: CSR/pair-expansion -> dense node tiles -> pair_scores.
+
+Returns (eta, inter) in *slot space* ([NBcap]) so `coarsen.propose` can use
+it as a drop-in for the segment-sum path. Tile bounds (U = unique neighbors
+per node, L = per-node traversal length) come from the level-0 Caps; they
+are not guaranteed monotone under coarsening (two merged nodes can union
+their neighborhoods), so the caller guards with a runtime `fits` predicate
+and lax.cond-falls back to the segment path — on real inputs coarse levels
+shrink and the kernel path keeps being taken (asserted in tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hypergraph import (Caps, DeviceHypergraph, Neighborhoods,
+                                   PairExpansion, NSENT)
+from repro.utils import segops
+from repro.kernels.pair_scores.kernel import pair_scores_pallas
+
+INTERPRET = jax.default_backend() != "tpu"
+NBR_PAD = jnp.int32(-1)
+TRAV_PAD = jnp.int32(-2)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((max(x, 1) + m - 1) // m) * m
+
+
+def tile_bounds(caps: Caps) -> tuple[int, int]:
+    u = _round_up(caps.u0, 128)
+    l = _round_up(caps.l0, 128)
+    return u, l
+
+
+def fits_kernel(d: DeviceHypergraph, nbrs: Neighborhoods,
+                pairs: PairExpansion, caps: Caps) -> jax.Array:
+    """Runtime predicate: every node's U/L within the level-0 tile bounds."""
+    u_bound, l_bound = tile_bounds(caps)
+    ucnt = nbrs.off[1:] - nbrs.off[:-1]
+    lcnt = jax.ops.segment_sum(
+        pairs.valid.astype(jnp.int32),
+        jnp.where(pairs.valid, jnp.clip(pairs.n, 0, caps.n - 1), caps.n),
+        num_segments=caps.n + 1)[: caps.n]
+    return (jnp.max(ucnt) <= u_bound) & (jnp.max(lcnt) <= l_bound)
+
+
+def score_slots_kernel(d: DeviceHypergraph, nbrs: Neighborhoods,
+                       pairs: PairExpansion, caps: Caps):
+    """(eta[NBcap], inter[NBcap]) via the Pallas kernel."""
+    U, L = tile_bounds(caps)
+    npad = _round_up(caps.n, 8)
+
+    # dense unique-neighbor slots [npad, U]
+    owner = segops.rows_from_offsets(nbrs.off, caps.nbrs, caps.n)
+    owner_safe = jnp.clip(owner, 0, caps.n - 1)
+    s = jnp.arange(caps.nbrs, dtype=jnp.int32)
+    rank_u = s - nbrs.off[owner_safe]
+    live_u = (nbrs.ids != NSENT) & (owner < caps.n) & (rank_u < U)
+    pos_u = jnp.where(live_u, owner_safe * U + rank_u, npad * U)
+    nbr_dense = jnp.full((npad * U + 1,), NBR_PAD, jnp.int32)
+    nbr_dense = nbr_dense.at[pos_u].set(nbrs.ids, mode="drop")[:-1]
+    nbr_dense = nbr_dense.reshape(npad, U)
+
+    # dense traversal [npad, L] (rank via stable sort of pair entries by n)
+    pn = jnp.where(pairs.valid, pairs.n, NSENT)
+    t = jnp.arange(caps.pairs, dtype=jnp.int32)
+    (_, _), (perm,) = segops.sort_by([pn, t], [t])
+    sn = pn[perm]
+    cnts = jax.ops.segment_sum(
+        jnp.ones((caps.pairs,), jnp.int32),
+        jnp.where(sn == NSENT, caps.n, jnp.clip(sn, 0, caps.n - 1)),
+        num_segments=caps.n + 1)[: caps.n]
+    starts = segops.offsets_from_counts(cnts)[:-1]
+    rank_l = t - starts[jnp.clip(sn, 0, caps.n - 1)]
+    live_l = (sn != NSENT) & (rank_l < L)
+    pos_l = jnp.where(live_l, jnp.clip(sn, 0, caps.n - 1) * L + rank_l,
+                      npad * L)
+    def scatter(vals, fill, dtype):
+        out = jnp.full((npad * L + 1,), fill, dtype)
+        return out.at[pos_l].set(vals[perm].astype(dtype),
+                                 mode="drop")[:-1].reshape(npad, L)
+
+    m_dense = scatter(pairs.m, TRAV_PAD, jnp.int32)
+    w_dense = scatter(pairs.w_norm, 0.0, jnp.float32)
+    d_dense = scatter(pairs.both_dst.astype(jnp.int32), 0, jnp.int32)
+
+    eta_dense, inter_dense = pair_scores_pallas(
+        nbr_dense, m_dense, w_dense, d_dense, tn=8,
+        lc=min(128, L), interpret=INTERPRET)
+
+    # back to slot space
+    gidx = jnp.where(live_u, owner_safe * U + rank_u, 0)
+    eta = jnp.where(live_u, eta_dense.reshape(-1)[gidx], 0.0)
+    inter = jnp.where(live_u, inter_dense.reshape(-1)[gidx], 0)
+    return eta, inter

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the pair_scores kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pair_scores_ref(nbr, trav_m, trav_w, trav_d):
+    """nbr [N,U] (pad -1), trav_m [N,L] (pad -2), trav_w [N,L], trav_d [N,L].
+    Returns (eta [N,U] f32, inter [N,U] i32)."""
+    eq = trav_m[:, :, None] == nbr[:, None, :]
+    eta = jnp.sum(eq * trav_w[:, :, None], axis=1).astype(jnp.float32)
+    inter = jnp.sum(eq * (trav_d[:, :, None] != 0), axis=1).astype(jnp.int32)
+    return eta, inter

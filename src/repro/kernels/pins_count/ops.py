@@ -1,0 +1,63 @@
+"""jit'd wrapper: CSR hypergraph -> dense tiles -> pins_count kernel.
+
+Produces the same [kcap, Ecap] pins / pins_in matrices as the pure-JAX
+`repro.core.refine.pins_matrix`, routing the counting through the Pallas
+kernel. Densification (CSR -> [E, dbar]) is a cheap scatter; dbar is bounded
+by Caps.d_max, which is monotone non-increasing under coarsening, so one
+static shape serves the whole run.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hypergraph import Caps, DeviceHypergraph
+from repro.utils import segops
+from repro.kernels.pins_count.kernel import pins_count_pallas
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((max(x, 1) + m - 1) // m) * m
+
+
+def densify_edges(d: DeviceHypergraph, parts: jax.Array, caps: Caps,
+                  kcap: int, dbar: int):
+    """[Ecap_pad, dbar] partition id per (edge, slot); padding = kcap."""
+    t = jnp.arange(caps.p, dtype=jnp.int32)
+    live = t < d.n_pins
+    e_of = segops.rows_from_offsets(d.edge_off, caps.p, caps.e)
+    e_safe = jnp.clip(e_of, 0, caps.e - 1)
+    rel = t - d.edge_off[e_safe]
+    pin = jnp.clip(d.edge_pins, 0, caps.n - 1)
+    p_of = parts[pin]
+    is_dst = live & (rel >= d.edge_nsrc[e_safe])
+    epad = _round_up(caps.e, 8)
+    flat_pos = jnp.where(live & (rel < dbar), e_safe * dbar + rel,
+                         epad * dbar)
+    parts_dense = jnp.full((epad * dbar + 1,), kcap, jnp.int32)
+    parts_dense = parts_dense.at[flat_pos].set(jnp.where(live, p_of, kcap),
+                                               mode="drop")
+    dst_dense = jnp.zeros((epad * dbar + 1,), jnp.int32)
+    dst_dense = dst_dense.at[flat_pos].set(is_dst.astype(jnp.int32),
+                                           mode="drop")
+    return (parts_dense[:-1].reshape(epad, dbar),
+            dst_dense[:-1].reshape(epad, dbar))
+
+
+@partial(jax.jit, static_argnames=("caps", "kcap"))
+def pins_matrix_kernel(d: DeviceHypergraph, parts: jax.Array, caps: Caps,
+                       kcap: int):
+    """Drop-in replacement for refine.pins_matrix via the Pallas kernel."""
+    dc = min(128, _round_up(caps.d_max, 8))
+    dbar = _round_up(caps.d_max, dc)
+    parts_dense, dst_dense = densify_edges(d, parts, caps, kcap, dbar)
+    kdim = max(kcap, 8)
+    pins, pins_in = pins_count_pallas(parts_dense, dst_dense, kdim,
+                                      te=8, dc=dc, interpret=INTERPRET)
+    pins = pins[: caps.e, :kcap].T
+    pins_in = pins_in[: caps.e, :kcap].T
+    return pins, pins_in

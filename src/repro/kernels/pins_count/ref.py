@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the pins_count kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pins_count_ref(parts_dense, dst_dense, kdim: int):
+    """parts_dense: [E, dbar] int32 (>= kdim == padding). Returns
+    (pins[E, kdim], pins_in[E, kdim]) int32."""
+    onehot = parts_dense[:, :, None] == jnp.arange(kdim, dtype=jnp.int32)
+    pins = jnp.sum(onehot, axis=1, dtype=jnp.int32)
+    pins_in = jnp.sum(onehot & (dst_dense[:, :, None] != 0), axis=1,
+                      dtype=jnp.int32)
+    return pins, pins_in

@@ -1,0 +1,24 @@
+"""Production mesh builders.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (required for the dry-run's forced 512-host-device setup).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod ("data","model"); multi-pod adds a leading
+    2-pod axis (DCN) -> (2,16,16) ("pod","data","model")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Degenerate mesh over the actually-available local devices (smoke
+    tests / CPU examples)."""
+    n = len(jax.devices())
+    mp = max(1, min(model_parallel, n))
+    return jax.make_mesh((n // mp, mp), ("data", "model"))

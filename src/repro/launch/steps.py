@@ -1,0 +1,164 @@
+"""Jit-able step functions: train_step / prefill_step / serve_step, plus
+the ShapeDtypeStruct input factories for the dry-run.
+
+`input_specs(arch, shape)` follows the assignment contract: LM shapes are
+seq_len x global_batch; decode_* / long_* lower `serve_step` (one new token
+against a KV cache of seq_len); [audio]/[vlm] backbones take precomputed
+frame/patch embeddings from the stub frontend.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.registry import SHAPES, get_config
+from repro.dist.sharding import Plan
+from repro.models import common
+from repro.models import transformer as T
+from repro.train import optimizer as opt
+
+BF16 = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ArchConfig, plan: Plan | None,
+                    ocfg: opt.OptConfig = opt.OptConfig(),
+                    expert_perm=None):
+    def train_step(state: opt.TrainState, batch: dict):
+        def lf(p):
+            return T.loss_fn(p, batch, cfg, plan, expert_perm=expert_perm)
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(
+            state.params)
+        new_state = opt.adamw_update(state, grads, ocfg)
+        return new_state, {"loss": loss, **metrics}
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, plan: Plan | None, expert_perm=None):
+    def prefill_step(params, batch: dict, cache):
+        return T.prefill(params, batch["tokens"], cache, cfg, plan,
+                         vision=batch.get("vision"),
+                         enc_frames=batch.get("enc_frames"),
+                         expert_perm=expert_perm)
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, plan: Plan | None, expert_perm=None):
+    def serve_step(params, token, pos, cache):
+        return T.decode_step(params, token, pos, cache, cfg, plan,
+                             expert_perm=expert_perm)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs (no allocation)
+# ---------------------------------------------------------------------------
+def batch_specs(cfg: ArchConfig, batch: int, seq: int) -> dict:
+    s: dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if cfg.vision_dim:
+        s["vision"] = jax.ShapeDtypeStruct(
+            (batch, cfg.vision_tokens, cfg.vision_dim), BF16)
+    if cfg.encoder_layers:
+        enc_len = min(cfg.max_source_positions, seq)
+        s["enc_frames"] = jax.ShapeDtypeStruct(
+            (batch, enc_len, cfg.d_model), BF16)
+    return s
+
+
+def _dp_size(plan: Plan) -> int:
+    dp = plan.rules["batch"]
+    axes = (dp,) if isinstance(dp, str) else tuple(dp)
+    n = 1
+    for a in axes:
+        n *= plan.mesh.shape[a]
+    return n
+
+
+def _bsh(plan: Plan, batch: int, ndim: int):
+    """Batch sharding with small-batch fallback (e.g. long_500k B=1)."""
+    if batch % _dp_size(plan) != 0:
+        return plan.sharding(*([None] * ndim))
+    return plan.sharding(*(["batch"] + [None] * (ndim - 1)))
+
+
+def batch_shardings(cfg: ArchConfig, plan: Plan, batch: int) -> dict:
+    s: dict[str, Any] = {"tokens": _bsh(plan, batch, 2),
+                         "labels": _bsh(plan, batch, 2)}
+    if cfg.vision_dim:
+        s["vision"] = _bsh(plan, batch, 3)
+    if cfg.encoder_layers:
+        s["enc_frames"] = _bsh(plan, batch, 3)
+    return s
+
+
+def input_specs(arch: str, shape: str, plan: Plan | None = None) -> dict:
+    """Abstract (ShapeDtypeStruct) inputs + shardings for one dry-run cell.
+
+    Returns dict(kind, args=(...), in_shardings=(...)) matching the step fn
+    built by `make_*_step`.
+    """
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    B, S = sh["global_batch"], sh["seq_len"]
+    kind = sh["kind"]
+    pspecs = T.lm_shapes(cfg)
+
+    if kind == "train":
+        state = opt.abstract_state(pspecs)
+        batch = batch_specs(cfg, B, S)
+        if plan is None:
+            return dict(kind=kind, cfg=cfg, args=(state, batch),
+                        in_shardings=None)
+        sspec = opt.state_shapes(pspecs)
+        state_sh = opt.TrainState(
+            params=plan.param_shardings(sspec.params),
+            master=plan.param_shardings(sspec.master),
+            mu=plan.param_shardings(sspec.mu),
+            nu=plan.param_shardings(sspec.nu),
+            step=plan.sharding())
+        return dict(kind=kind, cfg=cfg, args=(state, batch),
+                    in_shardings=(state_sh, batch_shardings(cfg, plan, B)))
+
+    params = common.abstracts(pspecs, BF16)
+    cache_len = S + (cfg.vision_tokens if cfg.vision_dim else 0)
+    cspecs = T.cache_shapes(cfg, B, cache_len)
+    cache = common.abstracts(cspecs, BF16)
+    if kind == "prefill":
+        batch = batch_specs(cfg, B, S)
+        if plan is None:
+            return dict(kind=kind, cfg=cfg, args=(params, batch, cache),
+                        in_shardings=None)
+        return dict(kind=kind, cfg=cfg, args=(params, batch, cache),
+                    in_shardings=(plan.param_shardings(pspecs),
+                                  batch_shardings(cfg, plan, B),
+                                  plan.param_shardings(cspecs)))
+    # decode
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    if plan is None:
+        return dict(kind=kind, cfg=cfg, args=(params, token, pos, cache),
+                    in_shardings=None)
+    return dict(kind=kind, cfg=cfg, args=(params, token, pos, cache),
+                in_shardings=(plan.param_shardings(pspecs),
+                              _bsh(plan, B, 2), plan.sharding(),
+                              plan.param_shardings(cspecs)))
+
+
+def make_step(arch: str, shape: str, plan: Plan | None,
+              expert_perm=None):
+    cfg = get_config(arch)
+    kind = SHAPES[shape]["kind"]
+    if kind == "train":
+        return make_train_step(cfg, plan, expert_perm=expert_perm)
+    if kind == "prefill":
+        return make_prefill_step(cfg, plan, expert_perm=expert_perm)
+    return make_serve_step(cfg, plan, expert_perm=expert_perm)

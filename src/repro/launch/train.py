@@ -1,0 +1,64 @@
+"""Training launcher CLI.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
+      --steps 50 --batch 8 --seq 128 [--ckpt-dir /tmp/ck --resume]
+
+On a real fleet this binary runs once per host (jax.distributed.initialize
+picks up the coordinator from the env); on this container it runs
+single-process over local devices.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import get_config
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", choices=["none", "host"], default="none")
+    ap.add_argument("--deadline-s", type=float, default=0.0)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    from repro.train.loop import train
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+
+    plan = None
+    if args.mesh == "host":
+        from repro.dist.sharding import Plan
+        from repro.launch.mesh import make_host_mesh
+        plan = Plan.make(make_host_mesh())
+
+    res = train(cfg, steps=args.steps, global_batch=args.batch,
+                seq_len=args.seq, plan=plan, ckpt_dir=args.ckpt_dir,
+                ckpt_every=args.ckpt_every, resume=args.resume,
+                seed=args.seed, deadline_s=args.deadline_s)
+    print(f"steps={res.steps} wall={res.wall_s:.1f}s "
+          f"first_loss={res.losses[0][1]:.4f} last_loss={res.losses[-1][1]:.4f}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(dataclasses_asdict(res), f)
+    return 0
+
+
+def dataclasses_asdict(res):
+    return dict(losses=res.losses, steps=res.steps, restarts=res.restarts,
+                wall_s=res.wall_s)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

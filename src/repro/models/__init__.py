@@ -1,0 +1,1 @@
+from repro.models import common, layers, ssm, transformer  # noqa: F401

@@ -1,0 +1,231 @@
+"""Recurrent mixers: Mamba (selective SSM, chunked parallel scan), and the
+xLSTM blocks (mLSTM: matrix memory, chunkwise-parallel linear-attention
+form; sLSTM: scalar memory, sequential scan). These are the sub-quadratic
+mixers that make the `long_500k` decode cells O(1) per token.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import Spec
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective state space)
+# ---------------------------------------------------------------------------
+def mamba_shapes(cfg: ArchConfig) -> dict:
+    mb = cfg.mamba
+    D = cfg.d_model
+    di = mb.expand * D
+    dt_rank = mb.dt_rank or max(1, math.ceil(D / 16))
+    return {
+        "w_in": Spec((D, 2 * di), ("embed", "mlp")),
+        "conv_w": Spec((mb.d_conv, di), (None, "mlp"), scale=0.5),
+        "conv_b": Spec((di,), ("mlp",), init="zeros"),
+        "w_x": Spec((di, dt_rank + 2 * mb.d_state), ("mlp", None)),
+        "w_dt": Spec((dt_rank, di), (None, "mlp")),
+        "b_dt": Spec((di,), ("mlp",), init="ones", scale=1.0),
+        "a_log": Spec((di, mb.d_state), ("mlp", None), init="ones"),
+        "d_skip": Spec((di,), ("mlp",), init="ones"),
+        "w_out": Spec((di, D), ("mlp", "embed")),
+    }
+
+
+def _mamba_scan_chunked(dA, dBx, h0, chunk: int):
+    """h_t = dA_t * h_{t-1} + dBx_t over axis 1 (S), chunked to bound the
+    associative-scan working set. dA/dBx: [B,S,di,ds]."""
+    B, S, di, ds = dA.shape
+    chunk = min(chunk, S)
+    chunk = math.gcd(chunk, S)
+    nc = S // chunk
+    dA_c = jnp.moveaxis(dA.reshape(B, nc, chunk, di, ds), 1, 0)
+    dBx_c = jnp.moveaxis(dBx.reshape(B, nc, chunk, di, ds), 1, 0)
+
+    def combine(a, b):
+        (a1, b1), (a2, b2) = a, b
+        return a2 * a1, a2 * b1 + b2
+
+    def body(h, ab):
+        a, b = ab
+        acum, bcum = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h_inner = bcum + acum * h[:, None]
+        return h_inner[:, -1], h_inner
+
+    h_last, hs = jax.lax.scan(body, h0, (dA_c, dBx_c))
+    return h_last, jnp.moveaxis(hs, 0, 1).reshape(B, S, di, ds)
+
+
+def mamba_apply(p, x, cfg: ArchConfig, state=None, chunk: int = 256,
+                plan=None):
+    """x [B,S,D]. state (decode): (conv_tail [B,d_conv-1,di], h [B,di,ds]).
+    Returns (out, new_state)."""
+    mb = cfg.mamba
+    B, S, D = x.shape
+    di = mb.expand * D
+    dt_rank = mb.dt_rank or max(1, math.ceil(D / 16))
+
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    if plan is not None:  # TP: d_inner over "model"
+        xz = plan.constraint(xz, "batch", None, "mlp")
+    xin, z = jnp.split(xz, 2, axis=-1)
+
+    # causal depthwise conv over S
+    if state is None:
+        tail = jnp.zeros((B, mb.d_conv - 1, di), x.dtype)
+    else:
+        tail = state[0]
+    xpad = jnp.concatenate([tail, xin], axis=1)
+    idx = jnp.arange(S)
+    conv = sum(xpad[:, idx + j, :] * p["conv_w"][j]
+               for j in range(mb.d_conv)) + p["conv_b"]
+    new_tail = xpad[:, S:, :] if xpad.shape[1] - S == mb.d_conv - 1 else \
+        xpad[:, -(mb.d_conv - 1):, :]
+    xc = jax.nn.silu(conv)
+
+    dbc = jnp.einsum("bse,ef->bsf", xc, p["w_x"])
+    dt_raw = dbc[..., :dt_rank]
+    Bmat = dbc[..., dt_rank: dt_rank + mb.d_state]
+    Cmat = dbc[..., dt_rank + mb.d_state:]
+    dt = jax.nn.softplus(jnp.einsum("bsr,re->bse", dt_raw, p["w_dt"])
+                         + p["b_dt"])                            # [B,S,di]
+    A = -jnp.exp(p["a_log"].astype(F32))                        # [di,ds]
+    dA = jnp.exp(dt[..., None].astype(F32) * A)                 # [B,S,di,ds]
+    dBx = (dt * xc)[..., None].astype(F32) * Bmat[:, :, None, :].astype(F32)
+
+    h0 = jnp.zeros((B, di, mb.d_state), F32) if state is None else \
+        state[1].astype(F32)
+    h_last, hs = _mamba_scan_chunked(dA, dBx, h0, chunk)
+    y = jnp.einsum("bsen,bsn->bse", hs, Cmat.astype(F32)).astype(x.dtype)
+    y = y + xc * p["d_skip"]
+    out = jnp.einsum("bse,ed->bsd", y * jax.nn.silu(z), p["w_out"])
+    return out, (new_tail, h_last)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory, chunkwise linear attention with decay)
+# ---------------------------------------------------------------------------
+def mlstm_shapes(cfg: ArchConfig) -> dict:
+    D = cfg.d_model
+    H, DH = cfg.n_heads, cfg.d_model // cfg.n_heads
+    return {
+        "wq": Spec((D, D), ("embed", "heads")),
+        "wk": Spec((D, D), ("embed", "heads")),
+        "wv": Spec((D, D), ("embed", "heads")),
+        "w_i": Spec((D, H), ("embed", None), scale=0.02),
+        "w_f": Spec((D, H), ("embed", None), scale=0.02),
+        "b_f": Spec((H,), (None,), init="ones", scale=3.0),
+        "w_og": Spec((D, D), ("embed", "heads")),
+        "wo": Spec((D, D), ("heads", "embed")),
+    }
+
+
+def mlstm_apply(p, x, cfg: ArchConfig, state=None, chunk: int = 128):
+    """Chunkwise mLSTM: C_t = f_t C_{t-1} + i_t v_t k_t^T, y_t = C_t q_t /
+    max(|n_t q_t|, 1). state: (C [B,H,DH,DH], n [B,H,DH])."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    DH = D // H
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(B, S, H, DH)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(B, S, H, DH) / math.sqrt(DH)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(B, S, H, DH)
+    logf = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dh->bsh", x, p["w_f"]).astype(F32) + p["b_f"])
+    logi = jnp.einsum("bsd,dh->bsh", x, p["w_i"]).astype(F32)
+
+    chunk = math.gcd(min(chunk, S), S)
+    nc = S // chunk
+    rs = lambda a: jnp.moveaxis(a.reshape(B, nc, chunk, *a.shape[2:]), 1, 0)
+    qc, kc, vc, fc, ic = map(rs, (q, k, v, logf, logi))
+
+    if state is None:
+        C0 = jnp.zeros((B, H, DH, DH), F32)
+        n0 = jnp.zeros((B, H, DH), F32)
+    else:
+        C0, n0 = (state[0].astype(F32), state[1].astype(F32))
+
+    def body(carry, xs):
+        C, n = carry
+        qb, kb, vb, fb, ib = xs
+        fcum = jnp.cumsum(fb, axis=1)                   # [B,c,H]
+        # intra-chunk (quadratic within chunk)
+        dmat = (fcum[:, :, None] - fcum[:, None, :]) + ib[:, None, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)  # [B,c,c,H]
+        w = jnp.exp(dmat)
+        s = jnp.einsum("bihd,bjhd->bijh", qb, kb, preferred_element_type=F32)
+        y_intra = jnp.einsum("bijh,bijh,bjhe->bihe", s, w,
+                             vb.astype(F32))
+        # inter-chunk from carried state
+        decay_q = jnp.exp(fcum)                          # [B,c,H]
+        y_inter = jnp.einsum("bihd,bhde,bih->bihe",
+                             qb.astype(F32), C, decay_q)
+        n_dot = jnp.einsum("bihd,bhd,bih->bih", qb.astype(F32), n, decay_q)
+        n_intra = jnp.einsum("bijh,bjhd,bihd->bih", w, kb.astype(F32),
+                             qb.astype(F32))
+        denom = jnp.maximum(jnp.abs(n_dot + n_intra), 1.0)
+        y = (y_inter + y_intra) / denom[..., None]
+        # state update to end of chunk
+        ftot = fcum[:, -1]                               # [B,H]
+        dk = jnp.exp(ftot[:, None] - fcum + ib)          # [B,c,H]
+        C = C * jnp.exp(ftot)[..., None, None] + jnp.einsum(
+            "bjh,bjhd,bjhe->bhde", dk, kb.astype(F32), vb.astype(F32))
+        n = n * jnp.exp(ftot)[..., None] + jnp.einsum(
+            "bjh,bjhd->bhd", dk, kb.astype(F32))
+        return (C, n), y.astype(x.dtype)
+
+    (C, n), ys = jax.lax.scan(body, (C0, n0), (qc, kc, vc, fc, ic))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, D)
+    og = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["w_og"]))
+    out = jnp.einsum("bse,ed->bsd", y * og, p["wo"])
+    return out, (C, n)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: sLSTM (scalar memory, sequential)
+# ---------------------------------------------------------------------------
+def slstm_shapes(cfg: ArchConfig) -> dict:
+    D = cfg.d_model
+    return {
+        "w_gates": Spec((D, 4 * D), ("embed", "mlp")),
+        "r_gates": Spec((D, 4 * D), ("embed", "mlp"), scale=0.02),
+        "b_gates": Spec((4 * D,), ("mlp",), init="zeros"),
+        "wo": Spec((D, D), ("embed", "embed")),
+    }
+
+
+def slstm_apply(p, x, cfg: ArchConfig, state=None):
+    """Sequential sLSTM with exponential gating + stabilizer state.
+    state: (c, n, h, m) each [B, D]."""
+    B, S, D = x.shape
+    zx = jnp.einsum("bsd,de->bse", x, p["w_gates"]) + p["b_gates"]
+    if state is None:
+        zero = jnp.zeros((B, D), F32)
+        state = (zero, zero + 1.0, zero.astype(x.dtype), zero)
+    else:
+        c_, n_, h_, m_ = state
+        state = (c_.astype(F32), n_.astype(F32), h_.astype(x.dtype),
+                 m_.astype(F32))
+
+    def step(carry, zxt):
+        c, n, h, m = carry
+        z = zxt + jnp.einsum("bd,de->be", h, p["r_gates"])
+        zi, zf, zz, zo = jnp.split(z.astype(F32), 4, axis=-1)
+        m_new = jnp.maximum(zf + m, zi)
+        i = jnp.exp(zi - m_new)
+        f = jnp.exp(zf + m - m_new)
+        c = f * c + i * jnp.tanh(zz)
+        n = f * n + i
+        h_new = (jnp.tanh(c / jnp.maximum(n, 1.0))
+                 * jax.nn.sigmoid(zo)).astype(x.dtype)
+        return (c, n, h_new, m_new), h_new
+
+    (c, n, h, m), hs = jax.lax.scan(step, state, jnp.moveaxis(zx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1)
+    out = jnp.einsum("bsd,de->bse", y, p["wo"])
+    return out, (c, n, h, m)

@@ -1,0 +1,87 @@
+"""Batched serving engine: prefill + synchronized batched decode.
+
+Static batching: a batch of requests is padded to a common prompt length,
+prefilled once, then decoded lock-step with temperature/greedy sampling and
+per-sequence EOS masking. (Per-slot positions / continuous batching would
+need per-row cache scatter — noted as future work in DESIGN.md; the
+synchronized scheme is what the dry-run decode cells lower.)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    cfg: ArchConfig
+    params: object
+    cache_len: int
+    plan: object | None = None
+    temperature: float = 0.0
+    eos_id: int = 1
+    seed: int = 0
+
+    def __post_init__(self):
+        self._prefill = jax.jit(
+            lambda p, t, c: T.prefill(p, t, c, self.cfg, self.plan))
+        self._decode = jax.jit(
+            lambda p, t, pos, c: T.decode_step(p, t, pos, c, self.cfg,
+                                               self.plan))
+
+    def generate(self, prompts: np.ndarray, max_new: int = 32,
+                 extras: dict | None = None) -> np.ndarray:
+        """prompts: [B, S0] int32 (left-aligned, pad with 0 to equal S0).
+        Returns generated tokens [B, max_new]."""
+        B, S0 = prompts.shape
+        assert S0 + max_new <= self.cache_len, "cache too small"
+        cspecs = T.cache_shapes(self.cfg, B, self.cache_len)
+        cache = jax.tree.map(
+            jnp.zeros_like,
+            common.materialize(cspecs, jax.random.PRNGKey(0), jnp.float32))
+        kw = {}
+        if self.cfg.vision_dim:
+            kw["vision"] = jnp.zeros((B, self.cfg.vision_tokens,
+                                      self.cfg.vision_dim), jnp.float32)
+        if self.cfg.encoder_layers:
+            kw["enc_frames"] = jnp.zeros(
+                (B, min(self.cfg.max_source_positions, self.cache_len),
+                 self.cfg.d_model), jnp.float32)
+        if kw:
+            logits, cache = jax.jit(
+                lambda p, t, c, **k: T.prefill(p, t, c, self.cfg, self.plan,
+                                               **k))(self.params,
+                                                     jnp.asarray(prompts),
+                                                     cache, **kw)
+        else:
+            logits, cache = self._prefill(self.params, jnp.asarray(prompts),
+                                          cache)
+
+        rng = jax.random.PRNGKey(self.seed)
+        out = np.zeros((B, max_new), np.int32)
+        done = np.zeros((B,), bool)
+        pos_off = self.cfg.vision_tokens if self.cfg.vision_dim else 0
+        tok = self._sample(logits, rng)
+        for i in range(max_new):
+            out[:, i] = np.where(done, self.eos_id, np.asarray(tok))
+            done |= np.asarray(tok) == self.eos_id
+            if done.all():
+                break
+            rng, sub = jax.random.split(rng)
+            logits, cache = self._decode(self.params, tok[:, None],
+                                         jnp.int32(S0 + pos_off + i), cache)
+            tok = self._sample(logits, sub)
+        return out
+
+    def _sample(self, logits, rng):
+        if self.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            rng, logits / self.temperature, axis=-1).astype(jnp.int32)

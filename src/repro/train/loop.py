@@ -1,0 +1,109 @@
+"""Training loop: jit'd step + pipeline + checkpoints + watchdog.
+
+Works in two modes:
+  * host mode (CPU smoke / examples): mesh=None, everything local;
+  * mesh mode: params/opt-state sharded per Plan, batch device_put with the
+    batch sharding, identical step code (SPMD handles the rest).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ArchConfig
+from repro.data import make_pipeline
+from repro.dist.ft import StepWatchdog
+from repro.launch.steps import make_train_step
+from repro.models import common
+from repro.models import transformer as T
+from repro.train import optimizer as opt
+
+
+@dataclasses.dataclass
+class TrainResult:
+    losses: list
+    steps: int
+    restarts: int
+    wall_s: float
+
+
+def train(cfg: ArchConfig, *, steps: int, global_batch: int, seq_len: int,
+          plan=None, ckpt_dir: str | None = None, ckpt_every: int = 0,
+          resume: bool = False, seed: int = 0, log_every: int = 10,
+          ocfg: opt.OptConfig | None = None, deadline_s: float = 0.0,
+          expert_perm=None, param_dtype=jnp.float32) -> TrainResult:
+    t0 = time.time()
+    ocfg = ocfg or opt.OptConfig(total_steps=steps,
+                                 warmup=min(200, max(steps // 5, 1)))
+    pspecs = T.lm_shapes(cfg)
+    step_fn = make_train_step(cfg, plan, ocfg, expert_perm=expert_perm)
+
+    in_sh = None
+    if plan is not None:
+        sspec = opt.state_shapes(pspecs)
+        state_sh = opt.TrainState(
+            params=plan.param_shardings(sspec.params),
+            master=plan.param_shardings(sspec.master),
+            mu=plan.param_shardings(sspec.mu),
+            nu=plan.param_shardings(sspec.nu),
+            step=plan.sharding())
+        in_sh = (state_sh, {"tokens": plan.sharding("batch", None),
+                            "labels": plan.sharding("batch", None)})
+    jitted = jax.jit(step_fn, in_shardings=in_sh, donate_argnums=(0,))
+
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    start_step = 0
+    state = None
+    if resume and mgr and mgr.latest_step() is not None:
+        like = opt.abstract_state(pspecs, compute_dtype=param_dtype)
+        sh = None
+        if plan is not None:
+            sh = state_sh
+        start_step, state, extra = mgr.restore(like, shardings=sh)
+        if plan is None:  # restored leaves are host numpy; commit to device
+            state = jax.tree.map(jnp.asarray, state)
+    if state is None:
+        params = common.materialize(pspecs, jax.random.PRNGKey(seed),
+                                    param_dtype)
+        state = opt.init_state(params)
+        if plan is not None:
+            state = jax.device_put(state, state_sh)
+
+    pipe = make_pipeline(cfg, global_batch, seq_len, seed=seed + 1,
+                         start_step=start_step)
+    stalls: list[int] = []
+    wd = StepWatchdog(deadline_s, stalls.append) if deadline_s else None
+
+    losses = []
+    step = start_step
+    try:
+        while step < steps:
+            s, host_batch = pipe.next()
+            batch = {k: jnp.asarray(v) for k, v in host_batch.items()}
+            if plan is not None:
+                batch = jax.device_put(batch, in_sh[1])
+            if wd:
+                wd.arm(step)
+            state, metrics = jitted(state, batch)
+            if wd:
+                wd.disarm()
+            if step % log_every == 0 or step == steps - 1:
+                loss = float(metrics["loss"])
+                losses.append((step, loss))
+            step += 1
+            if mgr and ckpt_every and step % ckpt_every == 0:
+                mgr.save(step, state, extra={"data_step": step})
+    finally:
+        pipe.stop()
+        if wd:
+            wd.stop()
+    if mgr and ckpt_every:
+        mgr.save(step, state, extra={"data_step": step})
+    return TrainResult(losses=losses, steps=step, restarts=len(stalls),
+                       wall_s=time.time() - t0)

@@ -1,0 +1,1 @@
+from repro.utils import segops, hashing  # noqa: F401

@@ -1,0 +1,39 @@
+"""Deterministic hashing for the paper's symmetric pairing noise.
+
+The paper adds a small deterministic pseudorandom value
+``rng(min(n,m), max(n,m))`` to each histogram bin, symmetric and conditioned
+on both endpoints, capped at 10% of the mean h-edge weight (Sec. V-C). The
+paper does not specify the PRNG; we use splitmix32, a well-mixed 32-bit
+finalizer, identically on the JAX path, the Pallas kernel, and the numpy
+oracle so all three agree bit-for-bit.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _splitmix32(x):
+    """Works for jnp and np uint32 arrays alike."""
+    mod = jnp if isinstance(x, jnp.ndarray) else np
+    x = (x + mod.uint32(0x9E3779B9)).astype(mod.uint32)
+    x = (x ^ (x >> mod.uint32(16))) * mod.uint32(0x21F0AAAD)
+    x = (x ^ (x >> mod.uint32(15))) * mod.uint32(0x735A2D97)
+    x = x ^ (x >> mod.uint32(15))
+    return x
+
+
+def pair_noise_u32(a, b):
+    """Symmetric uint32 hash of an unordered pair of int32 ids."""
+    mod = jnp if isinstance(a, jnp.ndarray) else np
+    lo = mod.minimum(a, b).astype(mod.uint32)
+    hi = mod.maximum(a, b).astype(mod.uint32)
+    return _splitmix32(_splitmix32(lo) ^ (hi * mod.uint32(0x85EBCA6B)))
+
+
+def pair_noise(a, b, scale):
+    """Symmetric noise in [0, scale); ``scale`` = 0.1 * mean edge weight."""
+    mod = jnp if isinstance(a, jnp.ndarray) else np
+    u = pair_noise_u32(a, b)
+    return (u >> mod.uint32(8)).astype(mod.float32) * (
+        mod.float32(scale) / mod.float32(2 ** 24))

@@ -1,0 +1,174 @@
+"""Segmented / sorting primitives shared across the partitioner.
+
+These are the TPU-side analogues of the CUB device primitives the paper
+relies on (device radix sort, segmented prefix sums, atomics-based argmax):
+
+* multi-key lexicographic sort        -> ``jax.lax.sort(..., num_keys=k)``
+* segmented inclusive/exclusive scan  -> ``segmented_scan`` (associative_scan
+  over (carry-flag, value) pairs)
+* atomic lexicographic max            -> ``segment_argmax`` (two-pass
+  segment_max with an id tie-break, larger id wins — matching the paper's
+  deterministic claim resolution)
+
+All functions are jit-safe with static shapes; invalid lanes are expected to
+be masked by the caller with sentinel keys that sort to the end.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+INT_SENTINEL = jnp.int32(2**31 - 1)
+
+
+def segment_sum(data: jax.Array, seg: jax.Array, num: int) -> jax.Array:
+    return jax.ops.segment_sum(data, seg, num_segments=num)
+
+
+def segment_max(data: jax.Array, seg: jax.Array, num: int) -> jax.Array:
+    return jax.ops.segment_max(data, seg, num_segments=num)
+
+
+def segment_min(data: jax.Array, seg: jax.Array, num: int) -> jax.Array:
+    return jax.ops.segment_min(data, seg, num_segments=num)
+
+
+def f32_sort_key(x: jax.Array) -> jax.Array:
+    """Monotonic float32 -> uint32 mapping (total order, NaN-free inputs)."""
+    b = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    mask = jnp.where(b >> 31 != 0, jnp.uint32(0xFFFFFFFF), jnp.uint32(0x80000000))
+    return b ^ mask
+
+
+def segment_argmax(
+    values: jax.Array,
+    ids: jax.Array,
+    seg: jax.Array,
+    num: int,
+    valid: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-segment (max value, id) with *larger id winning ties*.
+
+    Mirrors the paper's atomic lexicographic max over ``(score, id)`` tuples.
+    Returns ``(maxval[num], argid[num])``; empty segments give
+    ``(-inf, -1)``.
+    """
+    neg = jnp.float32(-jnp.inf)
+    v = values.astype(jnp.float32)
+    if valid is not None:
+        v = jnp.where(valid, v, neg)
+    mx = jax.ops.segment_max(v, seg, num_segments=num)
+    mx = jnp.where(jnp.isneginf(mx), neg, mx)
+    hit = v == mx[seg]
+    if valid is not None:
+        hit = hit & valid
+    arg = jax.ops.segment_max(jnp.where(hit, ids, -1), seg, num_segments=num)
+    return mx, arg
+
+
+def segmented_scan(values: jax.Array, starts: jax.Array, reverse: bool = False) -> jax.Array:
+    """Inclusive segmented prefix-sum.
+
+    ``starts[i]`` is True where a new segment begins (data must be grouped by
+    segment — i.e. pre-sorted by segment key, as in the paper's events
+    pipeline).
+    """
+    flags = starts.astype(values.dtype)
+
+    def combine(a, b):
+        af, av = a
+        bf, bv = b
+        return jnp.maximum(af, bf), jnp.where(bf > 0, bv, av + bv)
+
+    _, out = jax.lax.associative_scan(combine, (flags, values), reverse=reverse)
+    return out
+
+
+def segment_starts_from_sorted(keys: Sequence[jax.Array]) -> jax.Array:
+    """Boolean 'new segment starts here' flags from sorted key columns."""
+    k0 = keys[0]
+    n = k0.shape[0]
+    diff = jnp.zeros((n,), dtype=bool).at[0].set(True)
+    for k in keys:
+        d = jnp.concatenate([jnp.ones((1,), bool), k[1:] != k[:-1]])
+        diff = diff | d
+    return diff
+
+
+def sort_by(keys: Sequence[jax.Array], payloads: Sequence[jax.Array]):
+    """Stable lexicographic sort of payloads by key columns."""
+    ops = list(keys) + list(payloads)
+    out = jax.lax.sort(ops, num_keys=len(keys), is_stable=True)
+    return out[: len(keys)], out[len(keys):]
+
+
+def compact_flags(flags: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Positions for stream-compaction: returns (dest_idx, total_count).
+
+    ``dest_idx[i]`` is the output slot for element ``i`` if ``flags[i]``,
+    else undefined. ``total_count`` is the number of surviving elements.
+    """
+    f = flags.astype(jnp.int32)
+    pos = jnp.cumsum(f) - f
+    return pos, jnp.sum(f)
+
+
+def scatter_compact(
+    data: jax.Array, flags: jax.Array, out_size: int, fill
+) -> tuple[jax.Array, jax.Array]:
+    """Stream-compact ``data[flags]`` into a fresh array of ``out_size``."""
+    pos, cnt = compact_flags(flags)
+    out = jnp.full((out_size,) + data.shape[1:], fill, dtype=data.dtype)
+    idx = jnp.where(flags, pos, out_size)  # out-of-range drops
+    out = out.at[idx].set(data, mode="drop")
+    return out, cnt
+
+
+def offsets_from_counts(counts: jax.Array) -> jax.Array:
+    """CSR offsets [n+1] from per-segment counts [n]."""
+    return jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)])
+
+
+def rows_from_offsets(offsets: jax.Array, total: int, num_rows: int) -> jax.Array:
+    """Expand CSR offsets to a per-element row-id array of length ``total``.
+
+    Elements beyond ``offsets[num_rows_actual]`` (padding) get row id
+    == num_rows (one past the end), so they can be masked / dropped by
+    segment ops.
+    """
+    marks = jnp.zeros((total + 1,), jnp.int32)
+    n = offsets.shape[0] - 1
+    marks = marks.at[offsets[1:]].add(1, mode="drop")
+    rows = jnp.cumsum(marks)[:total]
+    return jnp.minimum(rows, num_rows)
+
+
+def searchsorted_segmented(
+    sorted_vals: jax.Array,
+    seg_off_lo: jax.Array,
+    seg_off_hi: jax.Array,
+    queries: jax.Array,
+    n_iters: int,
+) -> jax.Array:
+    """For each query i, binary-search ``queries[i]`` in
+    ``sorted_vals[seg_off_lo[i]:seg_off_hi[i]]``; returns the global index of
+    the first element == query (callers guarantee presence), else hi.
+
+    This is the vectorized analogue of the paper's per-thread binary search
+    into shared-memory histogram bins.
+    """
+    lo = seg_off_lo
+    hi = seg_off_hi
+
+    def body(_, lh):
+        lo, hi = lh
+        mid = (lo + hi) // 2
+        v = sorted_vals[jnp.clip(mid, 0, sorted_vals.shape[0] - 1)]
+        go_right = v < queries
+        return jnp.where(go_right, mid + 1, lo), jnp.where(go_right, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, n_iters, body, (lo, hi))
+    return lo

@@ -1,0 +1,100 @@
+"""Coarsening: eta/inter oracle, constraint validity per level, coarse
+hypergraph structural invariants (paper Secs. V-B/C/E)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import generate, metrics
+from repro.core import hypergraph as H
+from repro.core.coarsen import CoarsenParams, coarsen_step, propose, score_slots
+from repro.core.contract import contract
+
+
+def eta_inter_oracle(hg):
+    """Numpy histogram exactly as Eq. 5 + inter counter (Fig. 3)."""
+    eta, inter = {}, {}
+    for e in range(hg.n_edges):
+        pins = hg.edge(e)
+        dst = set(hg.dst(e).tolist())
+        w = hg.edge_w[e] / len(pins)
+        for a in pins:
+            for b in pins:
+                if a == b:
+                    continue
+                eta[(a, b)] = eta.get((a, b), 0.0) + w
+                if a in dst and b in dst:
+                    inter[(a, b)] = inter.get((a, b), 0) + 1
+    return eta, inter
+
+
+def test_eta_inter_match_oracle():
+    hg = generate.random_kuniform(30, 40, 5, seed=2, n_src=2, weighted=True)
+    caps = H.Caps.for_host(hg)
+    d = H.device_from_host(hg, caps)
+    pairs = H.build_pairs(d, caps)
+    nbrs = H.build_neighbors(pairs, d, caps)
+    eta, inter = score_slots(d, nbrs, pairs, caps)
+    eta_o, inter_o = eta_inter_oracle(hg)
+    off, ids = np.asarray(nbrs.off), np.asarray(nbrs.ids)
+    eta_np, inter_np = np.asarray(eta), np.asarray(inter)
+    for n in range(hg.n_nodes):
+        for s in range(off[n], off[n + 1]):
+            m = ids[s]
+            assert abs(eta_np[s] - eta_o.get((n, m), 0.0)) < 1e-4
+            assert inter_np[s] == inter_o.get((n, m), 0)
+
+
+def test_coarsening_levels_respect_constraints():
+    hg = generate.snn_smallworld(n_nodes=120, fanout=6, seed=5)
+    caps = H.Caps.for_host(hg)
+    d = H.device_from_host(hg, caps)
+    params = CoarsenParams(omega=12, delta=40)
+    for lvl in range(6):
+        match, n_pairs, _ = coarsen_step(d, caps, params)
+        if int(n_pairs) == 0:
+            break
+        d2, gamma = contract(d, match, caps)
+        n = int(d.n_nodes)
+        g = np.asarray(gamma)[:n]
+        host = H.host_from_device(d)
+        sizes, inbound = metrics.partition_loads(
+            host, g, np.asarray(d.node_size)[:n])
+        assert (sizes <= params.omega).all()
+        assert (inbound <= params.delta).all()
+        # device bookkeeping must agree with host recomputation
+        nn = int(d2.n_nodes)
+        np.testing.assert_array_equal(np.asarray(d2.node_size)[:nn], sizes)
+        np.testing.assert_array_equal(np.asarray(d2.node_nin)[:nn], inbound)
+        d = d2
+
+
+def test_contract_structural_invariants():
+    hg = generate.ispd_like(n_nodes=150, seed=7)
+    caps = H.Caps.for_host(hg)
+    d = H.device_from_host(hg, caps)
+    params = CoarsenParams(omega=8, delta=2**20)
+    match, _, _ = coarsen_step(d, caps, params)
+    d2, gamma = contract(d, match, caps)
+    h2 = H.host_from_device(d2)
+    h2.validate()  # unique pins per edge, valid offsets
+    # edge identity/weights preserved
+    assert h2.n_edges == hg.n_edges
+    np.testing.assert_array_equal(h2.edge_w, hg.edge_w)
+    # pin sets are gamma images
+    g = np.asarray(gamma)[: hg.n_nodes]
+    for e in range(0, hg.n_edges, 17):
+        assert set(h2.edge(e).tolist()) == {int(g[p]) for p in hg.edge(e)}
+        # src pins that also appear as dst are dropped from src (paper V-E)
+        src2 = set(h2.src(e).tolist())
+        dst2 = set(h2.dst(e).tolist())
+        assert not (src2 & dst2)
+
+
+def test_propose_respects_validity_mask():
+    hg = generate.random_kuniform(40, 60, 4, seed=3)
+    caps = H.Caps.for_host(hg)
+    d = H.device_from_host(hg, caps)
+    pairs = H.build_pairs(d, caps)
+    nbrs = H.build_neighbors(pairs, d, caps)
+    params = CoarsenParams(omega=1, delta=2**20)  # size 1 => nothing valid
+    props = propose(d, nbrs, pairs, caps, params)
+    assert (np.asarray(props.cand_ids)[0][: hg.n_nodes] == -1).all()

@@ -1,0 +1,40 @@
+"""End-to-end multi-level partitioner + k-way mode (paper Secs. III, VII-E)."""
+import numpy as np
+
+from repro.core import generate, metrics
+from repro.core.kway import partition_kway
+from repro.core.partitioner import partition
+
+
+def test_snn_mode_valid_and_beats_trivial():
+    hg = generate.snn_layered(n_layers=4, width=48, fanout=6, window=12,
+                              seed=2)
+    res = partition(hg, omega=24, delta=96, theta=4)
+    assert res.audit["size_ok"] and res.audit["inbound_ok"]
+    assert res.parts.min() >= 0
+    assert len(np.unique(res.parts)) == res.n_parts
+    # near-minimal partition count (paper: coarsening reaches ceil(N/Omega))
+    assert res.n_parts <= 3 * int(np.ceil(hg.n_nodes / 24))
+
+
+def test_snn_mode_deterministic():
+    hg = generate.snn_smallworld(n_nodes=80, fanout=5, seed=9)
+    r1 = partition(hg, omega=10, delta=36, theta=2)
+    r2 = partition(hg, omega=10, delta=36, theta=2)
+    np.testing.assert_array_equal(r1.parts, r2.parts)
+
+
+def test_kway_balanced():
+    hg = generate.ispd_like(n_nodes=400, seed=4)
+    for k in (2, 4):
+        res = partition_kway(hg, k=k, eps=0.05, theta=4, coarse_target=32)
+        assert res.n_parts <= k
+        assert res.audit["balance_eps"] <= 0.05 + 1e-6
+        assert res.audit["size_ok"]
+
+
+def test_refinement_improves_over_coarsening_only():
+    hg = generate.snn_smallworld(n_nodes=150, fanout=7, seed=3)
+    r_no = partition(hg, omega=16, delta=56, theta=1)
+    r_ref = partition(hg, omega=16, delta=56, theta=6)
+    assert r_ref.connectivity <= r_no.connectivity + 1e-6

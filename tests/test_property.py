@@ -1,0 +1,94 @@
+"""Hypothesis property tests on system invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import generate, metrics
+from repro.core import hypergraph as H
+from repro.core.coarsen import CoarsenParams, coarsen_step
+from repro.core.contract import contract
+from repro.utils import segops
+
+SET = settings(max_examples=12, deadline=None,
+               suppress_health_check=[HealthCheck.too_slow])
+
+
+@given(n=st.integers(8, 40), e=st.integers(5, 40), k=st.integers(2, 6),
+       seed=st.integers(0, 1000))
+@SET
+def test_pair_expansion_complete_and_exact(n, e, k, seed):
+    hg = generate.random_kuniform(n, e, min(k, n), seed=seed)
+    caps = H.Caps.for_host(hg)
+    d = H.device_from_host(hg, caps)
+    pairs = H.build_pairs(d, caps)
+    got = set()
+    pe, pn, pm, pv = map(np.asarray, (pairs.edge, pairs.n, pairs.m,
+                                      pairs.valid))
+    for i in range(len(pv)):
+        if pv[i]:
+            got.add((int(pe[i]), int(pn[i]), int(pm[i])))
+    exp = set()
+    for ei in range(hg.n_edges):
+        pins = hg.edge(ei)
+        for a in pins:
+            for b in pins:
+                if a != b:
+                    exp.add((ei, int(a), int(b)))
+    assert got == exp
+
+
+@given(n=st.integers(12, 60), fanout=st.integers(3, 8),
+       omega=st.integers(2, 12), seed=st.integers(0, 100))
+@SET
+def test_one_coarsen_level_always_valid(n, fanout, omega, seed):
+    hg = generate.snn_smallworld(n_nodes=n, fanout=fanout, seed=seed)
+    # feasibility precondition (paper Sec. II-B assumes a valid solution
+    # exists): Delta must cover the largest single-node inbound set
+    _, _, _, node_nin = hg.incidence()
+    delta = max(2 * fanout, 8, int(node_nin.max(initial=0)))
+    caps = H.Caps.for_host(hg)
+    d = H.device_from_host(hg, caps)
+    match, n_pairs, _ = coarsen_step(
+        d, caps, CoarsenParams(omega=omega, delta=delta, n_cands=2))
+    m = np.asarray(match)[:n]
+    # matching is an involution on matched nodes
+    for a in range(n):
+        if m[a] >= 0:
+            assert m[m[a]] == a and m[a] != a
+    d2, gamma = contract(d, match, caps)
+    g = np.asarray(gamma)[:n]
+    sizes, inbound = metrics.partition_loads(hg, g)
+    assert (sizes <= omega).all()
+    assert (inbound <= delta).all()
+    # gamma is a surjection onto [0, n_new)
+    assert set(g.tolist()) == set(range(int(d2.n_nodes)))
+
+
+@given(vals=st.lists(st.floats(-100, 100, width=32), min_size=2,
+                     max_size=50),
+       seed=st.integers(0, 100))
+@SET
+def test_segmented_scan_property(vals, seed):
+    rng = np.random.default_rng(seed)
+    v = np.asarray(vals, np.float32)
+    starts = rng.random(len(v)) < 0.3
+    starts[0] = True
+    out = np.asarray(segops.segmented_scan(jnp.asarray(v),
+                                           jnp.asarray(starts)))
+    i0 = 0
+    for i in range(len(v)):
+        if starts[i]:
+            i0 = i
+        np.testing.assert_allclose(out[i], v[i0:i + 1].sum(), rtol=1e-4,
+                                   atol=1e-4)
+
+
+@given(seed=st.integers(0, 50), k=st.integers(2, 5))
+@SET
+def test_connectivity_lower_bound_cutnet(seed, k):
+    """Conn >= cut-net always; equal iff every cut edge spans 2 parts."""
+    rng = np.random.default_rng(seed)
+    hg = generate.random_kuniform(24, 30, 4, seed=seed, weighted=True)
+    parts = rng.integers(0, k, size=hg.n_nodes)
+    assert metrics.connectivity(hg, parts) >= metrics.cut_net(hg, parts) - 1e-6

@@ -1,0 +1,64 @@
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import segops
+from repro.utils.hashing import pair_noise
+
+
+def test_segment_argmax_tiebreak_larger_id():
+    vals = jnp.asarray([1.0, 3.0, 3.0, 2.0, 5.0])
+    ids = jnp.arange(5, dtype=jnp.int32)
+    seg = jnp.asarray([0, 0, 0, 1, 1])
+    mx, arg = segops.segment_argmax(vals, ids, seg, 2)
+    assert mx.tolist() == [3.0, 5.0]
+    assert arg.tolist() == [2, 4]  # larger id wins the tie
+
+
+def test_segmented_scan_matches_numpy():
+    rng = np.random.default_rng(1)
+    vals = rng.normal(size=64).astype(np.float32)
+    starts = np.zeros(64, bool)
+    starts[[0, 10, 11, 40]] = True
+    out = np.asarray(segops.segmented_scan(jnp.asarray(vals),
+                                           jnp.asarray(starts)))
+    exp = vals.copy()
+    seg_start = 0
+    for i in range(64):
+        if starts[i]:
+            seg_start = i
+        exp[i] = vals[seg_start: i + 1].sum()
+    np.testing.assert_allclose(out, exp, rtol=1e-5)
+
+
+def test_scatter_compact():
+    data = jnp.asarray([5, 6, 7, 8, 9], jnp.int32)
+    flags = jnp.asarray([True, False, True, True, False])
+    out, cnt = segops.scatter_compact(data, flags, 5, -1)
+    assert int(cnt) == 3
+    assert out.tolist() == [5, 7, 8, -1, -1]
+
+
+def test_rows_from_offsets_with_empty_segments():
+    off = jnp.asarray([0, 2, 2, 5, 5], jnp.int32)
+    rows = segops.rows_from_offsets(off, 5, 4)
+    assert rows.tolist() == [0, 0, 2, 2, 2]
+
+
+def test_searchsorted_segmented():
+    vals = jnp.asarray([1, 3, 5, 2, 4, 9], jnp.int32)
+    lo = jnp.asarray([0, 0, 3, 3], jnp.int32)
+    hi = jnp.asarray([3, 3, 6, 6], jnp.int32)
+    q = jnp.asarray([3, 5, 9, 2], jnp.int32)
+    idx = segops.searchsorted_segmented(vals, lo, hi, q, 8)
+    assert idx.tolist() == [1, 2, 5, 3]
+
+
+def test_pair_noise_symmetric_and_bounded():
+    a = np.arange(100, dtype=np.int32)
+    b = (a * 7 + 3) % 100
+    n1 = pair_noise(a, b, 1.0)
+    n2 = pair_noise(b.astype(np.int32), a, 1.0)
+    np.testing.assert_array_equal(n1, n2)
+    assert (n1 >= 0).all() and (n1 < 1.0).all()
+    jn = pair_noise(jnp.asarray(a), jnp.asarray(b), 1.0)
+    np.testing.assert_allclose(np.asarray(jn), n1, rtol=1e-6)

@@ -1,0 +1,52 @@
+"""End-to-end behaviour tests for the paper's system: full multi-level
+partitioning vs the three baselines (quality ordering claims from Fig. 7),
+and the framework integration (planner -> MoE routing permutation used in a
+real forward pass)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import (onepass_partition, overlap_partition,
+                             sequential_multilevel)
+from repro.configs import get_config
+from repro.core import generate, metrics, planner
+from repro.core.partitioner import partition
+
+
+def test_full_system_beats_or_matches_baselines():
+    """Paper Fig. 7 directional claim: ours <= baselines on connectivity
+    at matched constraints (synthetic analogue, small scale)."""
+    hg = generate.snn_layered(n_layers=4, width=56, fanout=7, window=14,
+                              seed=8)
+    om, dl = 28, 96
+    ours = partition(hg, omega=om, delta=dl, theta=8)
+    assert ours.audit["size_ok"] and ours.audit["inbound_ok"]
+    seq_parts, _ = sequential_multilevel(hg, om, dl)
+    ov_parts, _ = overlap_partition(hg, om, dl)
+    op_parts, _ = onepass_partition(hg, om, dl)
+    conn = {
+        "ours": ours.connectivity,
+        "seq-ml": metrics.connectivity(hg, seq_parts),
+        "overlap": metrics.connectivity(hg, ov_parts),
+        "onepass": metrics.connectivity(hg, op_parts),
+    }
+    # ours within 5% of the best baseline, never the worst
+    best = min(conn["seq-ml"], conn["overlap"], conn["onepass"])
+    worst = max(conn["seq-ml"], conn["overlap"], conn["onepass"])
+    assert conn["ours"] <= best * 1.05 or conn["ours"] < worst, conn
+
+
+def test_planner_perm_flows_into_model_forward():
+    cfg = get_config("llama4-scout-17b-16e").smoke()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, n_experts=8, top_k=2))
+    out = planner.plan_expert_placement(cfg, n_shards=2, seed=1, theta=2)
+    perm = jnp.asarray(out["perm"])
+    from repro.models import common, transformer as T
+    params = common.materialize(T.lm_shapes(cfg), jax.random.PRNGKey(0))
+    batch_tokens = jnp.ones((2, 16), jnp.int32)
+    x, _, _ = T.forward(params, batch_tokens, cfg, mode="train",
+                        remat=False, expert_perm=perm)
+    assert bool(jnp.isfinite(x).all())
