@@ -1,0 +1,2 @@
+from repro.dist.ft import StepWatchdog, TrainSupervisor  # noqa: F401
+from repro.dist.sharding import Plan  # noqa: F401

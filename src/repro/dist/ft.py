@@ -1,0 +1,129 @@
+"""Fault-tolerant supervision: straggler watchdog + restartable train driver.
+
+On a 1000-host fleet the two dominant failure modes are (a) a host that
+*stalls* (network partition, hung collective — no exception, just silence)
+and (b) a host that *dies* (preemption, hardware fault — an exception
+surfaces at the next dispatch). `StepWatchdog` covers (a): a timer thread
+armed around each step fires a callback with the stuck step number so the
+driver can alert or abort the collective. `TrainSupervisor` covers (b):
+it re-enters the step loop from the last checkpoint, replaying the
+deterministic data pipeline forward — every step's effect lands exactly
+once relative to the restored state.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable
+
+
+class StepWatchdog:
+    """Fires `on_stall(step)` once if an armed step exceeds `deadline_s`.
+
+    arm(step)  — start (or restart) the countdown for `step`;
+    disarm()   — step finished in time, cancel the countdown;
+    stop()     — shut the thread down (idempotent).
+
+    One callback per arm: after firing, the watchdog disarms itself until
+    the next `arm` call. The callback runs on the watchdog thread — keep it
+    cheap (append to a list, set an event, signal an abort).
+    """
+
+    def __init__(self, deadline_s: float, on_stall: Callable[[int], Any]):
+        self.deadline_s = float(deadline_s)
+        self.on_stall = on_stall
+        self._cv = threading.Condition()
+        self._step: int | None = None
+        self._deadline: float | None = None
+        self._stopped = False
+        self._thread = threading.Thread(target=self._watch, daemon=True,
+                                        name="step-watchdog")
+        self._thread.start()
+
+    def arm(self, step: int) -> None:
+        with self._cv:
+            self._step = step
+            self._deadline = time.monotonic() + self.deadline_s
+            self._cv.notify_all()
+
+    def disarm(self) -> None:
+        with self._cv:
+            self._step = None
+            self._deadline = None
+            self._cv.notify_all()
+
+    def stop(self) -> None:
+        with self._cv:
+            self._stopped = True
+            self._cv.notify_all()
+        if threading.current_thread() is not self._thread:
+            self._thread.join(timeout=5.0)
+
+    def _watch(self) -> None:
+        while True:
+            fire_step = None
+            with self._cv:
+                if self._stopped:
+                    return
+                if self._step is None:
+                    self._cv.wait()
+                    continue
+                wait = self._deadline - time.monotonic()
+                if wait > 0:
+                    self._cv.wait(wait)
+                    continue
+                fire_step = self._step
+                self._step = None
+                self._deadline = None
+            # outside the lock: the callback may call arm/disarm/stop
+            self.on_stall(fire_step)
+
+
+class TrainSupervisor:
+    """Restarts a step loop from the last checkpoint on failure.
+
+    init_fn   — () -> initial state (used when no checkpoint exists yet);
+    save      — (step, state) -> None, called every `ckpt_every` steps;
+    restore   — () -> (step, state) of the newest checkpoint;
+    max_restarts — give up (re-raise) after this many restarts.
+
+    `run(step_fn, n_steps, ckpt_every)` drives `state = step_fn(state, step)`
+    for step in [0, n_steps). On an exception it restores and resumes from
+    the checkpointed step; steps after the checkpoint are re-executed
+    against the restored state, so each step's effect is applied exactly
+    once relative to it. Exposes `restarts` for telemetry.
+    """
+
+    def __init__(self, init_fn: Callable[[], Any],
+                 save: Callable[[int, Any], None],
+                 restore: Callable[[], tuple[int, Any]],
+                 max_restarts: int = 3):
+        self.init_fn = init_fn
+        self.save = save
+        self.restore = restore
+        self.max_restarts = max_restarts
+        self.restarts = 0
+        self.failures: list[tuple[int, str]] = []
+
+    def run(self, step_fn: Callable[[Any, int], Any], n_steps: int,
+            ckpt_every: int = 0) -> tuple[int, Any]:
+        step = 0
+        state = self.init_fn()
+        while step < n_steps:
+            try:
+                state = step_fn(state, step)
+            except Exception as e:  # noqa: BLE001 — any step failure restarts
+                self.failures.append((step, repr(e)))
+                if self.restarts >= self.max_restarts:
+                    raise
+                self.restarts += 1
+                try:
+                    step, state = self.restore()
+                except Exception:
+                    # no checkpoint yet: restart the run from scratch
+                    step, state = 0, self.init_fn()
+                continue
+            step += 1
+            if ckpt_every and step % ckpt_every == 0:
+                self.save(step, state)
+        return step, state

@@ -155,6 +155,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
         t_compile = time.time() - t0 - t_lower
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # jax<0.5: per-device list of dicts
+        cost = cost[0] if cost else {}
     mem = {}
     try:
         ma = compiled.memory_analysis()

@@ -75,12 +75,7 @@ def batch_specs(cfg: ArchConfig, batch: int, seq: int) -> dict:
 
 
 def _dp_size(plan: Plan) -> int:
-    dp = plan.rules["batch"]
-    axes = (dp,) if isinstance(dp, str) else tuple(dp)
-    n = 1
-    for a in axes:
-        n *= plan.mesh.shape[a]
-    return n
+    return plan.dp_size()
 
 
 def _bsh(plan: Plan, batch: int, ndim: int):

@@ -29,10 +29,14 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", choices=["none", "host"], default="none")
     ap.add_argument("--deadline-s", type=float, default=0.0)
+    ap.add_argument("--max-restarts", type=int, default=0,
+                    help="supervise the run: restart from the last "
+                         "checkpoint on failure, up to N times "
+                         "(requires --ckpt-dir and --ckpt-every)")
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
 
-    from repro.train.loop import train
+    from repro.train.loop import train, train_supervised
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
@@ -43,10 +47,14 @@ def main(argv=None):
         from repro.launch.mesh import make_host_mesh
         plan = Plan.make(make_host_mesh())
 
-    res = train(cfg, steps=args.steps, global_batch=args.batch,
-                seq_len=args.seq, plan=plan, ckpt_dir=args.ckpt_dir,
-                ckpt_every=args.ckpt_every, resume=args.resume,
-                seed=args.seed, deadline_s=args.deadline_s)
+    kw = dict(steps=args.steps, global_batch=args.batch,
+              seq_len=args.seq, plan=plan, ckpt_dir=args.ckpt_dir,
+              ckpt_every=args.ckpt_every, resume=args.resume,
+              seed=args.seed, deadline_s=args.deadline_s)
+    if args.max_restarts > 0:
+        res = train_supervised(cfg, max_restarts=args.max_restarts, **kw)
+    else:
+        res = train(cfg, **kw)
     print(f"steps={res.steps} wall={res.wall_s:.1f}s "
           f"first_loss={res.losses[0][1]:.4f} last_loss={res.losses[-1][1]:.4f}")
     if args.json:

@@ -25,7 +25,8 @@ from repro.configs.base import ArchConfig, LayerSpec
 from repro.models import layers as L
 from repro.models import ssm
 from repro.models.common import (Spec, apply_rope, rms_norm, layer_norm,
-                                 stack_specs, softmax_cross_entropy)
+                                 shard_map, stack_specs,
+                                 softmax_cross_entropy)
 
 F32 = jnp.float32
 
@@ -248,11 +249,11 @@ def _decode_attn_update(plan, q, k_new, v_new, kcache, vcache, pos):
         o = jax.lax.psum(o, "model") / jnp.maximum(l, 1e-30)[..., None]
         return o.reshape(B, 1, H, Dh).astype(qb.dtype), kb, vb
 
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(P(dp), P(dp), P(dp), P(dp, "model"), P(dp, "model"), P()),
         out_specs=(P(dp), P(dp, "model"), P(dp, "model")),
-        check_vma=False)(q, k_new, v_new, kcache, vcache, pos)
+        check=False)(q, k_new, v_new, kcache, vcache, pos)
 
 
 def _apply_mla(p, x, cfg, plan, mode, positions, cache, pos_scalar):
@@ -343,12 +344,12 @@ def _mla_decode_update(plan, p, q_nope, q_rope, c_new, kr_new, c_cache,
                          rank0=r * Sl)
             return lat, cb, krb
 
-        lat, cc, krc = jax.shard_map(
+        lat, cc, krc = shard_map(
             local, mesh=mesh,
             in_specs=(P(dp), P(dp), P(dp), P(dp), P(dp, "model"),
                       P(dp, "model"), P()),
             out_specs=(P(dp), P(dp, "model"), P(dp, "model")),
-            check_vma=False)(q_eff, qr, c_new, kr_new, c_cache, kr_cache, pos)
+            check=False)(q_eff, qr, c_new, kr_new, c_cache, kr_cache, pos)
 
     w_uv = p["w_uv"].reshape(m.kv_lora, H, m.d_v)
     o = jnp.einsum("bhq,qhv->bhv", lat.astype(q_nope.dtype), w_uv)

@@ -30,6 +30,12 @@ class ServeEngine:
     seed: int = 0
 
     def __post_init__(self):
+        if self.plan is not None:
+            # place params per the plan so callers can hand in host arrays;
+            # the decode path then runs sharded (seq-sharded KV flash-decode
+            # when the plan enables kv_seq)
+            self.params = jax.device_put(
+                self.params, self.plan.param_shardings(T.lm_shapes(self.cfg)))
         self._prefill = jax.jit(
             lambda p, t, c: T.prefill(p, t, c, self.cfg, self.plan))
         self._decode = jax.jit(
@@ -43,9 +49,17 @@ class ServeEngine:
         B, S0 = prompts.shape
         assert S0 + max_new <= self.cache_len, "cache too small"
         cspecs = T.cache_shapes(self.cfg, B, self.cache_len)
-        cache = jax.tree.map(
-            jnp.zeros_like,
-            common.materialize(cspecs, jax.random.PRNGKey(0), jnp.float32))
+        zeros = lambda: common.tree_map_specs(
+            lambda s: jnp.zeros(s.shape, jnp.float32), cspecs)
+        if self.plan is not None:
+            # allocate sharded from the start: a replicated-then-reshard
+            # cache would peak at full unsharded size per device, exactly
+            # what kv_seq sharding exists to avoid
+            cache = jax.jit(
+                zeros,
+                out_shardings=self.plan.param_shardings(cspecs))()
+        else:
+            cache = zeros()
         kw = {}
         if self.cfg.vision_dim:
             kw["vision"] = jnp.zeros((B, self.cfg.vision_tokens,

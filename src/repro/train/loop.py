@@ -92,6 +92,10 @@ def train(cfg: ArchConfig, *, steps: int, global_batch: int, seq_len: int,
                 wd.arm(step)
             state, metrics = jitted(state, batch)
             if wd:
+                # jit dispatch is async: a hung collective returns futures
+                # and would disarm instantly — block while armed so the
+                # countdown covers the step's actual execution
+                jax.block_until_ready(metrics)
                 wd.disarm()
             if step % log_every == 0 or step == steps - 1:
                 loss = float(metrics["loss"])
@@ -107,3 +111,30 @@ def train(cfg: ArchConfig, *, steps: int, global_batch: int, seq_len: int,
         mgr.save(step, state, extra={"data_step": step})
     return TrainResult(losses=losses, steps=step, restarts=len(stalls),
                        wall_s=time.time() - t0)
+
+
+def train_supervised(cfg: ArchConfig, *, max_restarts: int = 3,
+                     **kw) -> TrainResult:
+    """Crash-resilient `train`: on any exception (preemption, device loss,
+    injected fault) re-enters the loop from the last checkpoint, up to
+    `max_restarts` times. The deterministic step-indexed data pipeline makes
+    the replay exact — every step's effect lands once relative to the
+    restored state. (Per-step supervision with injectable save/restore is
+    `dist.ft.TrainSupervisor`; here checkpoint restore already lives inside
+    `train(resume=True)`, so a plain retry loop is the whole policy.)"""
+    if not (kw.get("ckpt_dir") and kw.get("ckpt_every")):
+        raise ValueError("train_supervised requires ckpt_dir and ckpt_every")
+    restarts = 0
+    while True:
+        # first attempt honors the caller's resume flag; any restart resumes
+        # from the checkpoint train() wrote before the failure
+        resume = bool(kw.get("resume", False)) or restarts > 0
+        try:
+            res = train(cfg, **{**kw, "resume": resume})
+        except Exception:
+            if restarts >= max_restarts:
+                raise
+            restarts += 1
+            continue
+        res.restarts += restarts
+        return res

@@ -1,8 +1,14 @@
 """Hypothesis property tests on system invariants."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (declared in [test] extras; "
+           "pip install hypothesis)")
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core import generate, metrics
 from repro.core import hypergraph as H
