@@ -1,0 +1,87 @@
+"""Refinement wall-time vs device count (the paper's hierarchical-
+parallelism claim, Sec. VI, measured on forced host devices).
+
+Each device count runs in a fresh subprocess (XLA device topology is fixed
+at backend init), partitions the same SNN hypergraph through
+`dist.partition` with a (1, n)-mesh Plan — all devices shard the pins/pairs
+pipelines — and reports the second run's refine wall-time (first run pays
+compile). On this CPU container the "devices" are host threads, so the
+numbers chart overhead/scaling shape rather than real speedup; on an
+accelerator mesh the same harness measures the real thing.
+
+  PYTHONPATH=src python -m benchmarks.dist_scaling
+  PYTHONPATH=src python -m benchmarks.run --only dist
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+DEVICE_COUNTS = (1, 2, 4, 8)
+
+_CHILD = textwrap.dedent("""
+    import os, sys, json
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + sys.argv[1])
+    import jax
+    from repro.core import generate
+    from repro.core.partitioner import partition
+    from repro.dist.sharding import Plan
+
+    n_dev = int(sys.argv[1])
+    mesh = jax.make_mesh((1, n_dev), ("data", "model"))
+    plan = Plan.make(mesh)
+    hg = generate.snn_layered(n_layers=4, width=48, fanout=8, window=12,
+                              seed=2)
+    res = None
+    for _ in range(2):   # second run: jit cache warm per caps signature
+        res = partition(hg, omega=24, delta=96, theta=4, plan=plan,
+                        race=False)
+    print(json.dumps(dict(refine_s=res.timings["refine"],
+                          total_s=res.timings["total"],
+                          connectivity=res.connectivity,
+                          n_parts=res.n_parts)))
+""")
+
+
+def run() -> list[str]:
+    from benchmarks.common import row
+
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env = dict(os.environ, PYTHONPATH=src)
+    env.pop("XLA_FLAGS", None)
+    out, base = [], None
+    for n in DEVICE_COUNTS:
+        try:
+            r = subprocess.run([sys.executable, "-c", _CHILD, str(n)],
+                               env=env, capture_output=True, text=True,
+                               timeout=1800)
+        except subprocess.TimeoutExpired:
+            out.append(row(f"dist_scaling/dev{n}", 0.0, "ERROR: timeout"))
+            continue
+        if r.returncode != 0:
+            err = (r.stderr.strip().splitlines() or ["no stderr"])[-1]
+            out.append(row(f"dist_scaling/dev{n}", 0.0,
+                           f"ERROR: {err[:120]}"))
+            continue
+        m = json.loads(r.stdout.strip().splitlines()[-1])
+        # rel_dev1 only once the dev-1 baseline itself succeeded
+        if n == DEVICE_COUNTS[0]:
+            base = m["refine_s"]
+        rel = (f"rel_dev{DEVICE_COUNTS[0]}={m['refine_s'] / base:.2f}x"
+               if base else "rel_dev1=n/a")
+        out.append(row(
+            f"dist_scaling/dev{n}", m["refine_s"] * 1e6,
+            f"refine_s={m['refine_s']:.3f} total_s={m['total_s']:.3f} "
+            f"conn={m['connectivity']:.0f} {rel}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for line in run():
+        print(line, flush=True)

@@ -245,7 +245,11 @@ class PairExpansion:
     n_pairs: jax.Array   # scalar int32
 
 
-def build_pairs(d: DeviceHypergraph, caps: Caps) -> PairExpansion:
+def build_pairs(d: DeviceHypergraph, caps: Caps,
+                idx: jax.Array | None = None,
+                idx_ok: jax.Array | None = None) -> PairExpansion:
+    """``idx``/``idx_ok`` (from ``ShardCtx.lanes(caps.pairs)``) restrict the
+    expansion to one shard's contiguous lane stripe; default is all lanes."""
     L = caps.pairs
     ecap = d.ecap
     card = (d.edge_off[1:] - d.edge_off[:-1]).astype(jnp.int32)  # [Ecap]
@@ -255,10 +259,13 @@ def build_pairs(d: DeviceHypergraph, caps: Caps) -> PairExpansion:
     poff = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(pcnt)])
     n_pairs = poff[-1]
 
-    idx = jnp.arange(L, dtype=jnp.int32)
+    if idx is None:
+        idx = jnp.arange(L, dtype=jnp.int32)
     e = jnp.clip(jnp.searchsorted(poff, idx, side="right").astype(jnp.int32) - 1,
                  0, ecap - 1)
     valid = idx < n_pairs
+    if idx_ok is not None:
+        valid = valid & idx_ok
     r = idx - poff[e]
     c = jnp.maximum(card[e], 2)
     i = r // (c - 1)

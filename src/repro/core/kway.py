@@ -24,8 +24,9 @@ from repro.core.contract import contract
 from repro.core.coarsen import CoarsenParams, coarsen_step
 from repro.core.hypergraph import (Caps, HostHypergraph, device_from_host,
                                    host_from_device)
-from repro.core.partitioner import PartitionResult, _next_pow2
-from repro.core.refine import RefineParams, refine_level
+from repro.core.partitioner import (PartitionResult, _next_pow2,
+                                    make_refine_fn)
+from repro.core.refine import RefineParams
 
 BIG_DELTA = 2 ** 29
 
@@ -64,9 +65,15 @@ def partition_kway(hg: HostHypergraph, k: int, eps: float = 0.03,
                    coarse_target: int | None = None,
                    use_kernels: bool = False, check_delta: bool = True,
                    collect_log: bool = False,
-                   max_levels: int = 64) -> PartitionResult:
+                   max_levels: int = 64,
+                   plan=None, race: bool = True,
+                   race_seed: int = 0) -> PartitionResult:
     """k-way balanced partitioning; cut-net results from minimizing
-    connectivity, exactly as the paper frames it."""
+    connectivity, exactly as the paper frames it.
+
+    plan/race/race_seed mirror `partitioner.partition`: with a `Plan`, each
+    refinement level runs as mesh-raced replicas with sharded pipelines via
+    `dist.partition.refine_level`."""
     t0 = time.perf_counter()
     omega = max(int((1 + eps) * hg.n_nodes / k), math.ceil(hg.n_nodes / k))
     caps = Caps.for_host(hg)
@@ -105,13 +112,15 @@ def partition_kway(hg: HostHypergraph, k: int, eps: float = 0.03,
 
     t_refine = time.perf_counter()
     rlog: list | None = [] if collect_log else None
-    parts = refine_level(d, parts, k, caps, kcap, rparams, rlog)
+    _refine = make_refine_fn(k, kcap, rparams, rlog, plan, race, race_seed)
+
+    parts = _refine(d, parts, caps, len(levels))
     for lvl in range(len(levels) - 1, -1, -1):
         g = gammas[lvl]
         d_lvl = levels[lvl]
         parts = jnp.where(jnp.arange(caps.n) < d_lvl.n_nodes,
                           parts[jnp.clip(g, 0, caps.n - 1)], 0)
-        parts = refine_level(d_lvl, parts, k, caps, kcap, rparams, rlog)
+        parts = _refine(d_lvl, parts, caps, lvl)
     t_refine = time.perf_counter() - t_refine
 
     parts_np = np.asarray(parts)[: hg.n_nodes].astype(np.int64)

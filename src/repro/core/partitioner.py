@@ -44,6 +44,26 @@ def _next_pow2(x: int) -> int:
     return 1 << max(0, math.ceil(math.log2(max(1, x))))
 
 
+def make_refine_fn(k, kcap: int, rparams: RefineParams, rlog,
+                   plan, race: bool, race_seed: int):
+    """Per-level refinement dispatcher shared by `partition` and
+    `kway.partition_kway`: plain `refine_level` without a plan, the
+    mesh-raced/sharded `dist.partition.refine_level` with one (seed offset
+    by level so replica tie-break permutations decorrelate across levels).
+    Returns `fn(d, parts, caps, level) -> parts`."""
+    if plan is None:
+        def _refine(d_, parts_, caps_, lvl_):
+            return refine_level(d_, parts_, k, caps_, kcap, rparams, rlog)
+    else:
+        import repro.dist.partition as dist_partition
+
+        def _refine(d_, parts_, caps_, lvl_):
+            return dist_partition.refine_level(
+                d_, parts_, k, caps_, kcap, rparams, plan, race=race,
+                seed=race_seed + lvl_, log=rlog)
+    return _refine
+
+
 def partition(hg: HostHypergraph, omega: int, delta: int,
               n_cands: int = 4, theta: int = 16, use_kernels: bool = False,
               refine_params: RefineParams | None = None,
@@ -51,12 +71,20 @@ def partition(hg: HostHypergraph, omega: int, delta: int,
               kcap_hint: int | None = None,
               matching: str = "exact",
               chain_rounds: int = 16,
-              bucket: bool = False) -> PartitionResult:
+              bucket: bool = False,
+              plan=None, race: bool = True,
+              race_seed: int = 0) -> PartitionResult:
     """Full multi-level constrained partitioning (paper's SNN mode).
 
     bucket=True enables pow2 capacity re-bucketing between levels (perf
     iteration P1; see EXPERIMENTS.md §Perf) — identical results, coarse
     levels run on geometrically shrinking arrays.
+
+    plan (a `repro.dist.Plan`) routes every refinement level through
+    `dist.partition.refine_level`: repetitions race as replicas across the
+    mesh's data axis (`race=False` for the deterministic parity mode) and
+    the pins-sized pipelines shard across its model axis. `race_seed`
+    decorrelates the replica tie-break permutations.
     """
     from repro.core.hypergraph import shrink_device
 
@@ -98,8 +126,10 @@ def partition(hg: HostHypergraph, omega: int, delta: int,
 
     t_refine = time.perf_counter()
     rlog: list | None = [] if collect_log else None
+    _refine = make_refine_fn(k, kcap, rparams, rlog, plan, race, race_seed)
+
     # refine the coarsest level too, then every uncoarsened level
-    parts = refine_level(d, parts, k, caps, kcap, rparams, rlog)
+    parts = _refine(d, parts, caps, len(levels))
     for lvl in range(len(levels) - 1, -1, -1):
         g = gammas[lvl]
         d_lvl, caps_lvl = levels[lvl]
@@ -107,7 +137,7 @@ def partition(hg: HostHypergraph, omega: int, delta: int,
         parts = jnp.where(jnp.arange(caps_lvl.n) < d_lvl.n_nodes,
                           parts[jnp.clip(g[: caps_lvl.n], 0,
                                          coarse_cap - 1)], 0)
-        parts = refine_level(d_lvl, parts, k, caps_lvl, kcap, rparams, rlog)
+        parts = _refine(d_lvl, parts, caps_lvl, lvl)
         if collect_log:
             log.append(dict(kind="refine", level=lvl))
     t_refine = time.perf_counter() - t_refine

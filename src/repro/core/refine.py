@@ -15,7 +15,14 @@ Pipeline per repetition (Theta total, default 16):
 CUDA -> TPU mapping: warp-per-node gain loops become segment reductions /
 the Pallas `gains` kernel; CUB sort+scan become `lax.sort` (multi-key) +
 segmented `associative_scan`; atomic grade claims become segment-argmax with
-id tie-breaks. The first half of the Theta repetitions may propose
+id tie-breaks.
+
+Every pins/pairs-sized stage threads an optional `segops.ShardCtx`: with a
+mesh axis set (inside `dist.partition`'s shard_map) the stage processes one
+contiguous lane stripe per device and combines dense segment outputs with
+psum; with the default ctx it is the exact single-device computation. Chain
+construction additionally takes a `tie_rank` permutation so racing replicas
+explore distinct (equally greedy) move orderings. The first half of the Theta repetitions may propose
 size-violating moves, the second half enforces size feasibility in the
 proposal — final validity is always enforced by the events check, with
 violations permitted *inside* the sequence (only the cut point must be
@@ -53,23 +60,28 @@ class RefineParams:
 # ---------------------------------------------------------------------------
 # 1. pins matrix
 # ---------------------------------------------------------------------------
-def pins_matrix(d: DeviceHypergraph, parts: jax.Array, caps: Caps, kcap: int):
-    """pins[p,e] (all pins) and pins_in[p,e] (dst pins only), [kcap, Ecap]."""
-    t = jnp.arange(caps.p, dtype=jnp.int32)
-    live = t < d.n_pins
-    e_of = segops.rows_from_offsets(d.edge_off, caps.p, caps.e)
+def pins_matrix(d: DeviceHypergraph, parts: jax.Array, caps: Caps, kcap: int,
+                ctx: segops.ShardCtx = segops.ShardCtx()):
+    """pins[p,e] (all pins) and pins_in[p,e] (dst pins only), [kcap, Ecap].
+
+    Sharded mode (``ctx.axis`` set, inside shard_map): each device counts
+    only its contiguous stripe of pin lanes and the dense [kcap, Ecap]
+    matrices are psum-combined — the all-gather-free segment reduction."""
+    t, in_rng = ctx.lanes(caps.p)
+    live = in_rng & (t < d.n_pins)
+    e_of = ctx.rows(d.edge_off, t, caps.p, caps.e)
     e_safe = jnp.clip(e_of, 0, caps.e - 1)
-    pin = jnp.clip(d.edge_pins, 0, caps.n - 1)
+    pin = jnp.clip(d.edge_pins[t], 0, caps.n - 1)
     p_of = jnp.where(live, parts[pin], kcap)
     rel = t - d.edge_off[e_safe]
     is_dst = live & (rel >= d.edge_nsrc[e_safe])
     flat = jnp.where(live, p_of * caps.e + e_safe, kcap * caps.e)
-    ones = jnp.ones((caps.p,), jnp.int32)
+    ones = jnp.ones(t.shape, jnp.int32)
     pins = jax.ops.segment_sum(ones, flat, num_segments=kcap * caps.e + 1)
-    pins = pins[:-1].reshape(kcap, caps.e)
+    pins = ctx.psum(pins[:-1]).reshape(kcap, caps.e)
     pins_in = jax.ops.segment_sum(is_dst.astype(jnp.int32), flat,
                                   num_segments=kcap * caps.e + 1)
-    pins_in = pins_in[:-1].reshape(kcap, caps.e)
+    pins_in = ctx.psum(pins_in[:-1]).reshape(kcap, caps.e)
     return pins, pins_in
 
 
@@ -86,30 +98,33 @@ def partition_sizes(d: DeviceHypergraph, parts: jax.Array, caps: Caps, kcap: int
 # ---------------------------------------------------------------------------
 def propose_moves(d: DeviceHypergraph, parts: jax.Array, pins: jax.Array,
                   caps: Caps, kcap: int, params: RefineParams,
-                  enforce_size: jax.Array, n_parts: jax.Array):
+                  enforce_size: jax.Array, n_parts: jax.Array,
+                  ctx: segops.ShardCtx = segops.ShardCtx()):
     """Returns (move_to[Ncap] or -1, gain_iso[Ncap], saving[Ncap])."""
-    t = jnp.arange(caps.p, dtype=jnp.int32)
-    live = t < d.n_pins
-    n_of = segops.rows_from_offsets(d.node_off, caps.p, caps.n)
+    t, in_rng = ctx.lanes(caps.p)
+    live = in_rng & (t < d.n_pins)
+    n_of = ctx.rows(d.node_off, t, caps.p, caps.n)
     n_safe = jnp.clip(n_of, 0, caps.n - 1)
-    e = jnp.clip(d.node_edges, 0, caps.e - 1)
+    e = jnp.clip(d.node_edges[t], 0, caps.e - 1)
     w = jnp.where(live, d.edge_w[e], 0.0)
     p_n = parts[n_safe]
 
     pins_own = pins[p_n, e]
-    saving = jax.ops.segment_sum(jnp.where(live & (pins_own == 1), w, 0.0),
-                                 jnp.where(live, n_of, caps.n),
-                                 num_segments=caps.n + 1)[: caps.n]
-    w_tot = jax.ops.segment_sum(w, jnp.where(live, n_of, caps.n),
-                                num_segments=caps.n + 1)[: caps.n]
+    saving = ctx.psum(jax.ops.segment_sum(
+        jnp.where(live & (pins_own == 1), w, 0.0),
+        jnp.where(live, n_of, caps.n), num_segments=caps.n + 1)[: caps.n])
+    w_tot = ctx.psum(jax.ops.segment_sum(
+        w, jnp.where(live, n_of, caps.n),
+        num_segments=caps.n + 1)[: caps.n])
 
     def _conn_segments():
         # conn_w[n, p] = sum_{e in I(n)} w(e) * [pins(p,e) > 0]
         contrib = jnp.where(live, w, 0.0)[:, None] * (pins[:, e].T > 0)
-        return jax.ops.segment_sum(contrib, jnp.where(live, n_of, caps.n),
-                                   num_segments=caps.n + 1)[: caps.n]
+        return ctx.psum(jax.ops.segment_sum(
+            contrib, jnp.where(live, n_of, caps.n),
+            num_segments=caps.n + 1)[: caps.n])
 
-    if params.use_kernels:
+    if params.use_kernels and ctx.axis is None:
         from repro.kernels.gains import ops as g_ops
         conn_w = jax.lax.cond(
             g_ops.fits_kernel(d, caps),
@@ -144,17 +159,27 @@ def propose_moves(d: DeviceHypergraph, parts: jax.Array, pins: jax.Array,
 # ---------------------------------------------------------------------------
 def build_sequence(d: DeviceHypergraph, parts: jax.Array, move_to: jax.Array,
                    gain: jax.Array, caps: Caps, kcap: int,
-                   params: RefineParams):
+                   params: RefineParams, tie_rank: jax.Array | None = None,
+                   with_aux: bool = False):
     """Orders moves into gain-ranked chains; returns seq[Ncap] (IMAX for
-    non-movers) and n_movers."""
+    non-movers) and n_movers.
+
+    ``tie_rank`` (a permutation of node ids, default identity) replaces the
+    node id wherever it only breaks ties — the sort keys, the successor-claim
+    argmax, and the cycle-cut anchor. Distinct permutations give the
+    replica-racing mode of ``dist.partition`` distinct (equally greedy)
+    chains per device; the identity reproduces the single-device sequence
+    bit-for-bit. ``with_aux`` additionally returns the pred/head arrays for
+    the oracle/property tests."""
     ids = jnp.arange(caps.n, dtype=jnp.int32)
+    rank = ids if tie_rank is None else tie_rank
     mover = move_to >= 0
     ps = jnp.where(mover, parts, kcap)
     pd = jnp.where(mover, move_to, kcap)
 
-    # sort movers by (ps, -gain, id): per-source-partition gain-descending
+    # sort movers by (ps, -gain, rank): per-source-partition gain-descending
     gkey = jnp.where(mover, -gain, jnp.float32(jnp.inf))
-    (_, _, _), (order,) = segops.sort_by([ps, gkey, ids], [ids])
+    (_, _, _), (order,) = segops.sort_by([ps, gkey, rank], [ids])
     # segment start offset per partition
     cnt_p = jax.ops.segment_sum(jnp.ones((caps.n,), jnp.int32), ps,
                                 num_segments=kcap + 1)[:kcap]
@@ -183,25 +208,28 @@ def build_sequence(d: DeviceHypergraph, parts: jax.Array, move_to: jax.Array,
         gmax = jnp.max(grade, axis=1)
         pick = jnp.max(jnp.where(grade == gmax[:, None], cand, -1), axis=1)
         want = free & (pick >= 0) & ~jnp.isneginf(gmax)
-        # conflicts: parallel max on (grade, proposer id) per successor (paper)
+        # conflicts: parallel max on (grade, proposer rank) per successor
+        # (paper's atomic lexicographic max; rank==id unless racing)
         succ_seg = jnp.where(want, pick, caps.n)
-        _, winner = segops.segment_argmax(gmax, ids, succ_seg, caps.n + 1,
+        _, winner = segops.segment_argmax(gmax, rank, succ_seg, caps.n + 1,
                                           valid=want)
         winner = winner[: caps.n]
-        got = want & (winner[jnp.clip(pick, 0, caps.n - 1)] == ids)
+        got = want & (winner[jnp.clip(pick, 0, caps.n - 1)] == rank)
         pred = pred.at[jnp.where(got, pick, caps.n)].set(ids, mode="drop")
         has_succ = has_succ | got
 
-    # --- resolve chains: cut cycles at their min-id node -------------------
+    # --- resolve chains: cut cycles at their min-rank node -----------------
     K = max(1, math.ceil(math.log2(caps.n + 1)) + 1)
     ptr = pred
-    minacc = jnp.where(ptr >= 0, jnp.minimum(ids, ptr), ids)
+    minacc = jnp.where(ptr >= 0,
+                       jnp.minimum(rank, rank[jnp.clip(ptr, 0, caps.n - 1)]),
+                       rank)
     for _ in range(K):
         p_safe = jnp.clip(ptr, 0, caps.n - 1)
         minacc = jnp.where(ptr >= 0, jnp.minimum(minacc, minacc[p_safe]), minacc)
         ptr = jnp.where(ptr >= 0, ptr[p_safe], -1)
     on_cycle = ptr >= 0  # pred-chain never terminated
-    cyc_head = on_cycle & (minacc == ids)
+    cyc_head = on_cycle & (minacc == rank)
     pred = jnp.where(cyc_head, -1, pred)
 
     # --- position within chain + chain head via pointer doubling ----------
@@ -222,7 +250,7 @@ def build_sequence(d: DeviceHypergraph, parts: jax.Array, move_to: jax.Array,
                                     num_segments=caps.n + 1)[: caps.n]
     is_head = mover & (head == ids)
     hkey = jnp.where(is_head, -chain_gain, jnp.float32(jnp.inf))
-    (_, _), (horder,) = segops.sort_by([hkey, ids], [ids])
+    (_, _), (horder,) = segops.sort_by([hkey, rank], [ids])
     # chain start offsets in ranked order
     rlen = jnp.where(is_head[horder], chain_len[horder], 0)
     roff = jnp.concatenate([jnp.zeros((1,), jnp.int32),
@@ -231,6 +259,9 @@ def build_sequence(d: DeviceHypergraph, parts: jax.Array, move_to: jax.Array,
     seq = jnp.where(mover, chain_start[jnp.clip(head, 0, caps.n - 1)] + dist,
                     IMAX)
     n_movers = jnp.sum(mover.astype(jnp.int32))
+    if with_aux:
+        return seq, n_movers, dict(pred=pred, head=head, dist=dist,
+                                   cyc_head=cyc_head)
     return seq, n_movers
 
 
@@ -239,8 +270,10 @@ def build_sequence(d: DeviceHypergraph, parts: jax.Array, move_to: jax.Array,
 # ---------------------------------------------------------------------------
 def inseq_gains(d: DeviceHypergraph, parts: jax.Array, pins: jax.Array,
                 move_to: jax.Array, gain_iso: jax.Array, seq: jax.Array,
-                caps: Caps, kcap: int):
-    pairs = build_pairs(d, caps)
+                caps: Caps, kcap: int,
+                ctx: segops.ShardCtx = segops.ShardCtx()):
+    pidx, p_ok = ctx.lanes(caps.pairs)
+    pairs = build_pairs(d, caps, idx=pidx, idx_ok=p_ok)
     n = jnp.clip(pairs.n, 0, caps.n - 1)
     m = jnp.clip(pairs.m, 0, caps.n - 1)
     e = jnp.clip(pairs.edge, 0, caps.e - 1)
@@ -251,25 +284,32 @@ def inseq_gains(d: DeviceHypergraph, parts: jax.Array, pins: jax.Array,
     ps_n, pd_n = parts[n], jnp.clip(move_to[n], 0, kcap - 1)
     ps_m, pd_m = parts[m], jnp.clip(move_to[m], 0, kcap - 1)
 
-    seg = jnp.where(mover_n, pairs.slot_n, caps.p)  # (n,e) incidence slot
-    num = caps.p + 1
+    # per-(n,e) counts, keyed by incidence slot. The count vectors are only
+    # ever read at this shard's own slot lanes, so combine the pair-shard
+    # partials with a reduce-scatter over the lane stripes (1/nshards the
+    # payload of a full psum). Lane stripes are ceil-divided, so the dense
+    # vector is padded to nshards * lanes-per-shard; the sentinel bucket
+    # sits past that.
+    t, t_ok = ctx.lanes(caps.p)
+    stripe_total = t.shape[0] * ctx.nshards
+    seg = jnp.where(mover_n, pairs.slot_n, stripe_total)
 
     def cnt(cond):
-        return jax.ops.segment_sum(jnp.where(before & cond, 1, 0), seg,
-                                   num_segments=num)[: caps.p]
+        return ctx.psum_stripe(jax.ops.segment_sum(
+            jnp.where(before & cond, 1, 0), seg,
+            num_segments=stripe_total + 1)[: stripe_total])
 
     a_pd = cnt(pd_n == ps_m)          # m leaving n's destination
     b_pd = cnt(pd_n == pd_m)          # m also entering it
     a_ps = cnt(ps_n == ps_m)          # m also leaving n's source
     b_ps = cnt(ps_n == pd_m)          # m entering it
 
-    # per-(n, e) evaluation at each live incidence slot
-    t = jnp.arange(caps.p, dtype=jnp.int32)
-    slot_live = t < d.n_pins
+    # per-(n, e) evaluation at each live incidence slot (slot lanes sharded)
+    slot_live = t_ok & (t < d.n_pins)
     # slot_n indexes edge_pins: node at that slot, edge via rows
-    e_slot = segops.rows_from_offsets(d.edge_off, caps.p, caps.e)
+    e_slot = ctx.rows(d.edge_off, t, caps.p, caps.e)
     e_slot = jnp.clip(e_slot, 0, caps.e - 1)
-    n_slot = jnp.clip(d.edge_pins, 0, caps.n - 1)
+    n_slot = jnp.clip(d.edge_pins[t], 0, caps.n - 1)
     is_mover = slot_live & (move_to[n_slot] >= 0)
     psn = parts[n_slot]
     pdn = jnp.clip(move_to[n_slot], 0, kcap - 1)
@@ -294,8 +334,9 @@ def inseq_gains(d: DeviceHypergraph, parts: jax.Array, pins: jax.Array,
         w * ((saving_now.astype(jnp.float32) - saving_iso.astype(jnp.float32))
              - (loss_now.astype(jnp.float32) - loss_iso.astype(jnp.float32))),
         0.0)
-    adj_n = jax.ops.segment_sum(adj, jnp.where(slot_live, n_slot, caps.n),
-                                num_segments=caps.n + 1)[: caps.n]
+    adj_n = ctx.psum(jax.ops.segment_sum(
+        adj, jnp.where(slot_live, n_slot, caps.n),
+        num_segments=caps.n + 1)[: caps.n])
     return gain_iso + adj_n
 
 
@@ -305,11 +346,24 @@ def inseq_gains(d: DeviceHypergraph, parts: jax.Array, pins: jax.Array,
 def events_validity(d: DeviceHypergraph, parts: jax.Array,
                     pins_in: jax.Array, move_to: jax.Array, seq: jax.Array,
                     gain_seq: jax.Array, caps: Caps, kcap: int,
-                    params: RefineParams):
+                    params: RefineParams,
+                    ctx: segops.ShardCtx = segops.ShardCtx()):
     """Returns (apply_mask[Ncap], applied_gain) — the max-cumulative-gain
     prefix of the move sequence whose end state satisfies both constraints
-    for every partition (violations *inside* the prefix are permitted)."""
-    ids = jnp.arange(caps.n, dtype=jnp.int32)
+    for every partition (violations *inside* the prefix are permitted).
+
+    All running counts scan in int32 (``segops.segmented_scan`` is
+    dtype-preserving): the previous float32 cast was exact only while
+    running sizes / distinct counts stayed below 2**24.
+
+    Sharded mode (``ctx.axis`` set): the pins-sized inbound-event pipeline
+    is distributed — event construction and the segmented scans run on each
+    device's contiguous lane stripe (cross-shard scan carries via
+    ``ShardCtx.segmented_scan``), and the per-seq violation deltas are
+    psum-combined dense vectors. The event *sort* gathers its compact key
+    columns first (a distributed merge sort is an open ROADMAP item); the
+    node-sized size-event pipeline stays replicated — it is O(N), dominated
+    by the O(pins) inbound pipeline."""
     mover = move_to >= 0
     ps = jnp.where(mover, parts, kcap)
     pd = jnp.where(mover, move_to, kcap)
@@ -327,8 +381,8 @@ def events_validity(d: DeviceHypergraph, parts: jax.Array,
     ev_d = jnp.where(msk, ev_d, 0)
     (sp, ss), (sd,) = segops.sort_by([ev_p, ev_s], [ev_d])
     starts = segops.segment_starts_from_sorted([sp])
-    cum = segops.segmented_scan(sd.astype(jnp.float32), starts)
-    size_after = init_size[jnp.clip(sp, 0, kcap - 1)] + cum.astype(jnp.int32)
+    cum = segops.segmented_scan(sd, starts)
+    size_after = init_size[jnp.clip(sp, 0, kcap - 1)] + cum
     inv = (sp < kcap) & (size_after > params.omega)
     prev_inv = jnp.where(
         starts, init_size[jnp.clip(sp, 0, kcap - 1)] > params.omega,
@@ -337,65 +391,71 @@ def events_validity(d: DeviceHypergraph, parts: jax.Array,
     size_vseq = jnp.where(sp < kcap, ss, IMAX)
 
     # ---- inbound events: (p, e, seq, +-1) over e in in(n) of movers ------
-    t = jnp.arange(caps.p, dtype=jnp.int32)
-    slot_live = t < d.n_pins
-    n_of = segops.rows_from_offsets(d.node_off, caps.p, caps.n)
+    # construction on this shard's pin-lane stripe
+    t, t_ok = ctx.lanes(caps.p)
+    slot_live = t_ok & (t < d.n_pins)
+    n_of = ctx.rows(d.node_off, t, caps.p, caps.n)
     n_safe = jnp.clip(n_of, 0, caps.n - 1)
-    e_in = jnp.clip(d.node_edges, 0, caps.e - 1)
-    is_ev = slot_live & d.node_is_in & mover[n_safe]
+    e_in = jnp.clip(d.node_edges[t], 0, caps.e - 1)
+    is_ev = slot_live & d.node_is_in[t] & mover[n_safe]
     ie_p = jnp.concatenate([jnp.where(is_ev, ps[n_safe], kcap),
                             jnp.where(is_ev, pd[n_safe], kcap)])
     ie_e = jnp.concatenate([jnp.where(is_ev, e_in, caps.e)] * 2)
     ie_s = jnp.concatenate([jnp.where(is_ev, seq[n_safe], IMAX)] * 2)
     ie_d = jnp.concatenate([jnp.where(is_ev, -1, 0),
                             jnp.where(is_ev, 1, 0)]).astype(jnp.int32)
-    (ip, ie, isq), (idl,) = segops.sort_by([ie_p, ie_e, ie_s], [ie_d])
-    pe_start = segops.segment_starts_from_sorted([ip, ie])
-    cum_pe = segops.segmented_scan(idl.astype(jnp.float32), pe_start)
-    base = pins_in[jnp.clip(ip, 0, kcap - 1), jnp.clip(ie, 0, caps.e - 1)]
-    run = base + cum_pe.astype(jnp.int32)
-    prev_run = jnp.where(pe_start, base,
-                         jnp.concatenate([jnp.zeros((1,), jnp.int32), run[:-1]]))
+    # global (p, e, seq) order: gather the compact event columns, sort, then
+    # hand each shard its contiguous stripe of the sorted order. Live event
+    # keys are unique (seq is a permutation, pins are unique per edge), so
+    # the sorted order is independent of the pre-sort shard interleaving.
+    ipf, ief, isf, idf = map(ctx.gather, (ie_p, ie_e, ie_s, ie_d))
+    (ipf, ief, isf), (idf,) = segops.sort_by([ipf, ief, isf], [idf])
+    pe_start = segops.segment_starts_from_sorted([ipf, ief])
+    basef = pins_in[jnp.clip(ipf, 0, kcap - 1), jnp.clip(ief, 0, caps.e - 1)]
+    ip = ctx.stripe(ipf)
+    ie = ctx.stripe(ief)
+    isq = ctx.stripe(isf)
+    pe_start_s = ctx.stripe(pe_start)
+    base = ctx.stripe(basef)
+    cum_pe, carry_pe = ctx.segmented_scan(ctx.stripe(idf), pe_start_s)
+    run = base + cum_pe
+    # `run` at the element just before this stripe: its base is known from
+    # the replicated keys, its scan value is the incoming carry
+    prev_idx = jnp.maximum(ctx.stripe_start(ipf.shape[0]) - 1, 0)
+    run_prev = jnp.concatenate([(basef[prev_idx] + carry_pe)[None], run[:-1]])
+    prev_run = jnp.where(pe_start_s, base, run_prev)
     live_ev = (ip < kcap) & (ie < caps.e)
     up = live_ev & (prev_run == 0) & (run > 0)     # 0 -> 1 : new distinct edge
     dn = live_ev & (prev_run > 0) & (run == 0)     # 1 -> 0 : edge left p
     dd = up.astype(jnp.int32) - dn.astype(jnp.int32)
-    # distinct-count running value per (p, seq): sort by (p, seq)
-    (dp2, ds2), (dd2,) = segops.sort_by(
-        [jnp.where(dd != 0, ip, kcap), jnp.where(dd != 0, isq, IMAX)], [dd])
-    p_start2 = segops.segment_starts_from_sorted([dp2])
-    cum2 = segops.segmented_scan(dd2.astype(jnp.float32), p_start2)
-    distinct_after = init_distinct[jnp.clip(dp2, 0, kcap - 1)] + cum2.astype(jnp.int32)
-    # per-(p,seq) group: take state at the last event of the group
-    grp_last = jnp.concatenate([
-        (dp2[1:] != dp2[:-1]) | (ds2[1:] != ds2[:-1]), jnp.ones((1,), bool)])
+    # distinct-count running value per (p, seq): sort by (p, seq) — same
+    # gather-sort-stripe pattern over the transition deltas
+    dpf, dsf, ddf = map(ctx.gather, (jnp.where(dd != 0, ip, kcap),
+                                     jnp.where(dd != 0, isq, IMAX), dd))
+    (dpf, dsf), (ddf,) = segops.sort_by([dpf, dsf], [ddf])
+    p_start2 = segops.segment_starts_from_sorted([dpf])
+    # per-(p,seq) group: state observable at the last event of the group
+    grp_lastf = jnp.concatenate([
+        (dpf[1:] != dpf[:-1]) | (dsf[1:] != dsf[:-1]), jnp.ones((1,), bool)])
+    dp2 = ctx.stripe(dpf)
+    ds2 = ctx.stripe(dsf)
+    p_start2_s = ctx.stripe(p_start2)
+    grp_last = ctx.stripe(grp_lastf)
+    cum2, _ = ctx.segmented_scan(ctx.stripe(ddf), p_start2_s)
+    distinct_after = init_distinct[jnp.clip(dp2, 0, kcap - 1)] + cum2
     inv_i = (dp2 < kcap) & (distinct_after > params.delta)
-    prev_inv_i = jnp.where(
-        p_start2, init_distinct[jnp.clip(dp2, 0, kcap - 1)] > params.delta,
-        jnp.concatenate([jnp.zeros((1,), bool), inv_i[:-1]]))
-    # state transitions only observable at group-lasts; compare against the
-    # state at the previous group-last in the same p-segment
-    in_vdelta = jnp.where(grp_last & (dp2 < kcap),
-                          inv_i.astype(jnp.int32), 0)
-    # reconstruct "previous group state": running inclusive via masked scan
-    def prev_group_state(flag_invalid, grp_last_mask, p_starts, init_inv):
-        vals = jnp.where(grp_last_mask, flag_invalid.astype(jnp.float32), 0.0)
-        picked = jnp.where(grp_last_mask, flag_invalid.astype(jnp.float32),
-                           jnp.float32(jnp.nan))
-        return vals, picked
-
-    # simpler: forward-fill last group state within p-segment
+    # forward-fill last group state within p-segment (value+1; 0 = none yet)
     state_here = jnp.where(grp_last, inv_i.astype(jnp.int32), -1)
-    filled = segops.segmented_scan(
-        jnp.where(state_here >= 0, state_here + 1, 0).astype(jnp.float32),
-        p_start2 | (state_here >= 0))
+    filled, carry_fill = ctx.segmented_scan(
+        jnp.where(state_here >= 0, state_here + 1, 0),
+        p_start2_s | (state_here >= 0))
     # filled at position of a group-last = its own state+1; previous group
-    prev_state = jnp.concatenate([jnp.zeros((1,), jnp.int32),
-                                  (filled[:-1]).astype(jnp.int32)]) - 1
-    seg_first_group = segops.segmented_scan(
-        grp_last.astype(jnp.float32), p_start2) <= 1.0
+    # state for this stripe's first element rides in on the scan carry
+    prev_state = jnp.concatenate([carry_fill[None], filled[:-1]]) - 1
+    nglast, _ = ctx.segmented_scan(grp_last.astype(jnp.int32), p_start2_s)
+    seg_first_group = nglast <= 1
     init_inv_i = init_distinct[jnp.clip(dp2, 0, kcap - 1)] > params.delta
-    prev_state = jnp.where(p_start2 | (prev_state < 0) | seg_first_group,
+    prev_state = jnp.where(p_start2_s | (prev_state < 0) | seg_first_group,
                            init_inv_i.astype(jnp.int32), prev_state)
     inb_vdelta = jnp.where(grp_last & (dp2 < kcap),
                            inv_i.astype(jnp.int32) - prev_state, 0)
@@ -406,9 +466,9 @@ def events_validity(d: DeviceHypergraph, parts: jax.Array,
     vd_size = jax.ops.segment_sum(
         size_vdelta, jnp.clip(jnp.where(size_vseq == IMAX, nm_cap, size_vseq),
                               0, nm_cap), num_segments=nm_cap + 1)[:nm_cap]
-    vd_inb = jax.ops.segment_sum(
+    vd_inb = ctx.psum(jax.ops.segment_sum(
         inb_vdelta, jnp.clip(jnp.where(inb_vseq == IMAX, nm_cap, inb_vseq),
-                             0, nm_cap), num_segments=nm_cap + 1)[:nm_cap]
+                             0, nm_cap), num_segments=nm_cap + 1)[:nm_cap])
     v0 = (jnp.sum((init_size[:kcap] > params.omega).astype(jnp.int32))
           + jnp.sum((init_distinct[:kcap] > params.delta).astype(jnp.int32)))
     active = v0 + jnp.cumsum(vd_size + vd_inb)
@@ -431,25 +491,40 @@ def events_validity(d: DeviceHypergraph, parts: jax.Array,
 # ---------------------------------------------------------------------------
 # 6. one refinement repetition + level driver
 # ---------------------------------------------------------------------------
+def refine_step_impl(d: DeviceHypergraph, parts: jax.Array,
+                     n_parts: jax.Array, caps: Caps, kcap: int,
+                     params: RefineParams, enforce_size: jax.Array,
+                     ctx: segops.ShardCtx = segops.ShardCtx(),
+                     tie_rank: jax.Array | None = None):
+    """One full repetition (pins -> proposal -> chains -> in-seq gains ->
+    events). Single source of truth for both the jitted single-device
+    ``refine_step`` and ``dist.partition``'s shard_map'd racing step
+    (``ctx`` shards the pins/pairs pipelines, ``tie_rank`` diversifies
+    replicas)."""
+    if params.use_kernels and ctx.axis is None:
+        from repro.kernels.pins_count import ops as pc_ops
+        pins, pins_in = pc_ops.pins_matrix_kernel(d, parts, caps, kcap)
+    else:
+        pins, pins_in = pins_matrix(d, parts, caps, kcap, ctx)
+    move_to, gain_iso, _ = propose_moves(
+        d, parts, pins, caps, kcap, params, enforce_size, n_parts, ctx)
+    seq, _ = build_sequence(d, parts, move_to, gain_iso, caps, kcap, params,
+                            tie_rank=tie_rank)
+    gain_seq = inseq_gains(d, parts, pins, move_to, gain_iso, seq, caps,
+                           kcap, ctx)
+    apply_mask, applied_gain = events_validity(
+        d, parts, pins_in, move_to, seq, gain_seq, caps, kcap, params, ctx)
+    parts_new = jnp.where(apply_mask, jnp.where(move_to >= 0, move_to, parts),
+                          parts)
+    return parts_new, applied_gain, jnp.sum(apply_mask.astype(jnp.int32))
+
+
 @partial(jax.jit, static_argnames=("caps", "kcap", "params", "enforce_size"))
 def refine_step(d: DeviceHypergraph, parts: jax.Array, n_parts: jax.Array,
                 caps: Caps, kcap: int, params: RefineParams,
                 enforce_size: bool):
-    if params.use_kernels:
-        from repro.kernels.pins_count import ops as pc_ops
-        pins, pins_in = pc_ops.pins_matrix_kernel(d, parts, caps, kcap)
-    else:
-        pins, pins_in = pins_matrix(d, parts, caps, kcap)
-    move_to, gain_iso, _ = propose_moves(
-        d, parts, pins, caps, kcap, params,
-        jnp.asarray(enforce_size), n_parts)
-    seq, _ = build_sequence(d, parts, move_to, gain_iso, caps, kcap, params)
-    gain_seq = inseq_gains(d, parts, pins, move_to, gain_iso, seq, caps, kcap)
-    apply_mask, applied_gain = events_validity(
-        d, parts, pins_in, move_to, seq, gain_seq, caps, kcap, params)
-    parts_new = jnp.where(apply_mask, jnp.where(move_to >= 0, move_to, parts),
-                          parts)
-    return parts_new, applied_gain, jnp.sum(apply_mask.astype(jnp.int32))
+    return refine_step_impl(d, parts, n_parts, caps, kcap, params,
+                            jnp.asarray(enforce_size))
 
 
 def refine_level(d: DeviceHypergraph, parts: jax.Array, n_parts,

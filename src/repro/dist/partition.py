@@ -1,0 +1,158 @@
+"""Mesh-sharded refinement driver: replica racing + sharded pins pipelines.
+
+The paper's 380x refinement speedup (Sec. VI) comes from two levels of
+parallelism that a single-device run serializes: the Theta independent
+repetitions per level, and the massive pins/pairs-sized kernels inside each
+repetition. This module maps both onto a `Plan` mesh with one `shard_map`:
+
+* **"data" axis — replicated racing repetitions.** Every device runs a full
+  repetition from the same partition vector but with a *distinct tie-break
+  permutation* threaded through chain construction (`build_sequence`'s sort
+  keys, successor-claim argmax, and cycle-cut anchor). Replica 0 keeps the
+  identity permutation, so the single-device trajectory is always in the
+  race. After the events check, a tiny all-gather of the per-replica applied
+  gains + argmax (ties -> lowest replica) picks the winner, whose applied
+  prefix is broadcast with a psum of the masked partition vector — no
+  partition-sized gather. Mt-KaHyPar-style independent repetitions, raced
+  instead of sequenced.
+
+* **"model" axis — sharded pins-sized pipelines.** Each pins/pairs-sized
+  stage of `core.refine` processes one contiguous lane stripe per device
+  (`segops.ShardCtx.lanes`) and combines *dense* per-node / per-partition
+  segment outputs with psum — the all-gather-free segment reduction.
+  Segmented scans over the sorted events run stripe-local with cross-shard
+  carries (`segops.sharded_segmented_scan`).
+
+Paper Sec. VI kernel -> sharded counterpart:
+
+  pins(p,e) matrix precompute (VI-B)   -> `refine.pins_matrix(ctx)`: lane
+      stripes + psum of the dense [kcap, Ecap] count matrices
+  warp-per-node gain loops (VI-B)      -> `refine.propose_moves(ctx)`:
+      striped incidence traversal, psum'd saving / w_tot / conn_w
+  grade claims via atomics (VI-C)      -> replicated `build_sequence` with
+      per-replica `tie_rank` (node-sized; raced, not sharded)
+  pair-expansion Eq. 14/15 (VI-C)      -> `refine.inseq_gains(ctx)`: pair
+      lanes striped via `build_pairs(idx)`, psum'd (n,e) counts
+  CUB sort + segmented scan (VI-D)     -> `refine.events_validity(ctx)`:
+      striped event construction, gathered compact-column sort (distributed
+      merge sort is an open ROADMAP item), stripe-local scans with
+      cross-shard carries, psum'd violation deltas
+
+Exactness: with racing off (or on the 1-replica data axis) every replica
+uses the identity permutation and the sharded pipelines psum integer /
+integer-valued partial sums, so the result is bit-identical to the
+single-device `core.partitioner.partition` — enforced by the parity tests
+in tests/test_dist_partition.py under 8 forced host devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.hypergraph import Caps
+from repro.core.refine import RefineParams, refine_step_impl
+from repro.dist.sharding import Plan
+from repro.models import common
+from repro.utils import segops
+
+
+def plan_axes(plan: Plan) -> tuple[str | None, str | None, int]:
+    """(replica axis or None, pipeline-shard axis or None, shard count).
+
+    The replica axis must be distinct from the pipeline-shard axis: the
+    sharded pipelines psum partial sums over "model" assuming every shard
+    holds the *same* move sequence, so replicas may never diverge along it.
+    On a mesh whose only axis is "model" the driver therefore shards the
+    pipelines and skips racing."""
+    names = tuple(plan.mesh.axis_names)
+    model_axis = ("model" if "model" in names
+                  and plan.mesh.shape["model"] > 1 else None)
+    nshards = plan.mesh.shape["model"] if model_axis else 1
+    if "data" in names:
+        data_axis = "data"
+    else:
+        cands = [a for a in names if a != "model"]
+        data_axis = cands[0] if cands else None
+    # a 1-replica axis cannot race: collapse it so the step skips the
+    # per-repetition permutation + winner collectives entirely
+    if data_axis is not None and plan.mesh.shape[data_axis] <= 1:
+        data_axis = None
+    return data_axis, model_axis, nshards
+
+
+@functools.lru_cache(maxsize=None)
+def _build_step(mesh, data_axis: str, model_axis: str | None, nshards: int,
+                caps: Caps, kcap: int, params: RefineParams, race: bool):
+    """One raced+sharded repetition, jitted; cached per static signature so
+    the host-driven level loop compiles once per capacity bucket (exactly
+    like `core.refine.refine_step`)."""
+    ctx = segops.ShardCtx(axis=model_axis, nshards=nshards)
+
+    def body(d, parts, n_parts, key, enforce):
+        ids = jnp.arange(caps.n, dtype=jnp.int32)
+        if race and data_axis is not None:
+            r = jax.lax.axis_index(data_axis)
+            perm = jax.random.permutation(
+                jax.random.fold_in(key, r), caps.n).astype(jnp.int32)
+            # replica 0 races the identity (single-device) ordering
+            tie_rank = jnp.where(r == 0, ids, perm)
+        else:
+            tie_rank = ids
+        parts_new, gain, nmv = refine_step_impl(
+            d, parts, n_parts, caps, kcap, params, enforce, ctx, tie_rank)
+        if data_axis is None:   # shard-only mesh: nothing to race
+            return parts_new, gain, nmv
+        # race resolution: scalar gains all-gathered, winner's partition
+        # vector broadcast by psum of the masked vector (no parts gather)
+        gains = jax.lax.all_gather(gain, data_axis)        # [n_replicas]
+        best = jnp.argmax(gains).astype(jnp.int32)         # tie -> replica 0
+        win = jax.lax.axis_index(data_axis) == best
+        parts_out = jax.lax.psum(jnp.where(win, parts_new, 0), data_axis)
+        nmv_out = jax.lax.psum(jnp.where(win, nmv, 0), data_axis)
+        return parts_out, gains[best], nmv_out
+
+    fn = common.shard_map(body, mesh=mesh,
+                          in_specs=(P(), P(), P(), P(), P()),
+                          out_specs=(P(), P(), P()))
+    return jax.jit(fn)
+
+
+def refine_level(d, parts, n_parts, caps: Caps, kcap: int,
+                 params: RefineParams, plan: Plan, *, race: bool = True,
+                 seed: int = 0, log: list | None = None):
+    """Drop-in for `core.refine.refine_level` on a mesh: Theta rounds, each
+    an R-way replica race (R = data-axis size) over pipelines sharded
+    M-way (M = model-axis size). `race=False` pins every replica to the
+    identity tie-break — deterministic parity mode."""
+    if params.use_kernels:
+        # Pallas kernels assume whole-array lanes; the sharded pipeline
+        # replaces them (they are the same segment reductions, striped)
+        params = dataclasses.replace(params, use_kernels=False)
+    data_axis, model_axis, nshards = plan_axes(plan)
+    step = _build_step(plan.mesh, data_axis, model_axis, nshards,
+                       caps, kcap, params, bool(race))
+    n_parts = jnp.asarray(n_parts, jnp.int32)
+    key = jax.random.PRNGKey(seed)
+    for rep in range(params.theta):
+        enforce = jnp.asarray(rep >= params.theta // 2)
+        parts, g, nmv = step(d, parts, n_parts,
+                             jax.random.fold_in(key, rep), enforce)
+        if log is not None:
+            log.append(dict(rep=rep, gain=float(g), applied=int(nmv),
+                            raced=bool(race)))
+    return parts
+
+
+def partition(hg, omega: int, delta: int, plan: Plan, *, race: bool = True,
+              seed: int = 0, **kw):
+    """Multi-level constrained partitioning with mesh-sharded refinement:
+    `core.partitioner.partition` with every refinement level raced and
+    sharded over `plan`. Coarsening stays single-device (it is a small
+    fraction of the runtime; see ROADMAP)."""
+    from repro.core.partitioner import partition as _partition
+    return _partition(hg, omega, delta, plan=plan, race=race,
+                      race_seed=seed, **kw)

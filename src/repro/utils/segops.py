@@ -12,9 +12,18 @@ relies on (device radix sort, segmented prefix sums, atomics-based argmax):
 
 All functions are jit-safe with static shapes; invalid lanes are expected to
 be masked by the caller with sentinel keys that sort to the end.
+
+``ShardCtx`` extends the same primitives across a mesh axis inside
+``shard_map``: contiguous lane-striping for the pins/pairs-sized loops,
+``psum``-combined dense segment reductions (no data all-gathers), and
+cross-shard segmented-scan carries (``sharded_segmented_scan``). With
+``axis=None`` every helper degrades to the exact single-device computation,
+so the refinement pipeline in ``core/refine.py`` is written once and runs
+identically in both modes.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Sequence
 
@@ -22,6 +31,90 @@ import jax
 import jax.numpy as jnp
 
 INT_SENTINEL = jnp.int32(2**31 - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Mesh-axis shard context for segment pipelines under ``shard_map``.
+
+    ``axis=None`` (the default) is the single-device identity: ``lanes``
+    covers everything, ``psum``/``gather``/``stripe`` are no-ops and
+    ``segmented_scan`` has a zero carry. Frozen + hashable so it can ride in
+    jit static arguments.
+    """
+
+    axis: str | None = None
+    nshards: int = 1
+
+    def index(self) -> jax.Array:
+        if self.axis is None:
+            return jnp.int32(0)
+        return jax.lax.axis_index(self.axis).astype(jnp.int32)
+
+    def psum(self, x: jax.Array) -> jax.Array:
+        """Combine per-shard partial dense reductions (the all-gather-free
+        segment reduction: dense outputs travel, never the lanes)."""
+        if self.axis is None:
+            return x
+        return jax.lax.psum(x, self.axis)
+
+    def lanes(self, total: int) -> tuple[jax.Array, jax.Array]:
+        """(global lane ids, in-range mask) for this shard's contiguous
+        stripe of ``total`` lanes (ceil-divided; the tail shard may own
+        out-of-range padding lanes, masked False)."""
+        per = -(-total // max(self.nshards, 1))
+        t = self.index() * per + jnp.arange(per, dtype=jnp.int32)
+        return t, t < total
+
+    def rows(self, offsets: jax.Array, t: jax.Array, total: int,
+             num_rows: int) -> jax.Array:
+        """CSR row ids for this shard's lanes ``t`` (`rows_from_offsets`
+        semantics: padding lanes map to ``num_rows``). Sharded mode binary-
+        searches only the stripe's lanes — O(P/S log E) per device instead
+        of materializing the full O(P) expansion everywhere."""
+        if self.axis is None:
+            return rows_from_offsets(offsets, total, num_rows)
+        r = jnp.searchsorted(offsets, t, side="right").astype(jnp.int32) - 1
+        return jnp.minimum(r, num_rows)
+
+    def psum_stripe(self, x: jax.Array) -> jax.Array:
+        """Reduce-scatter: psum a dense per-lane vector (length =
+        lanes-per-shard * nshards) and keep only this shard's stripe —
+        1/nshards the payload of a full psum when the consumer only reads
+        its own lanes. Identity (the stripe is everything) on one device."""
+        if self.axis is None:
+            return x
+        return jax.lax.psum_scatter(x, self.axis, scatter_dimension=0,
+                                    tiled=True)
+
+    def gather(self, x: jax.Array) -> jax.Array:
+        """Concatenate all shards' stripes (in shard order) — used only for
+        the sort keys/payloads of the events pipeline; see
+        ``core.refine.events_validity`` for why sort is the one gathered
+        stage."""
+        if self.axis is None:
+            return x
+        g = jax.lax.all_gather(x, self.axis)
+        return g.reshape((-1,) + g.shape[2:])
+
+    def stripe(self, x: jax.Array) -> jax.Array:
+        """This shard's contiguous stripe of a replicated array whose length
+        divides ``nshards`` (gathered-sorted arrays always do)."""
+        if self.axis is None:
+            return x
+        per = x.shape[0] // self.nshards
+        return jax.lax.dynamic_slice_in_dim(x, self.index() * per, per)
+
+    def stripe_start(self, length: int) -> jax.Array:
+        """Global offset of this shard's stripe of a length-``length``
+        replicated array."""
+        return self.index() * (length // max(self.nshards, 1))
+
+    def segmented_scan(self, values: jax.Array, starts: jax.Array
+                       ) -> tuple[jax.Array, jax.Array]:
+        """Cross-shard segmented scan over stripe-laid-out data; returns
+        ``(values, carry_in)`` — see ``sharded_segmented_scan``."""
+        return sharded_segmented_scan(values, starts, self.axis)
 
 
 def segment_sum(data: jax.Array, seg: jax.Array, num: int) -> jax.Array:
@@ -69,22 +162,71 @@ def segment_argmax(
     return mx, arg
 
 
+def scan_combine(a, b):
+    """Monoid for segmented prefix-sums over (start-flag, value) pairs.
+
+    Associative; identity is ``(0, 0)``. Shared by the in-device
+    ``segmented_scan`` and the cross-shard carry fold in
+    ``sharded_segmented_scan`` so both paths sum in exactly the same order
+    within an element's segment.
+    """
+    af, av = a
+    bf, bv = b
+    return jnp.maximum(af, bf), jnp.where(bf > 0, bv, av + bv)
+
+
 def segmented_scan(values: jax.Array, starts: jax.Array, reverse: bool = False) -> jax.Array:
     """Inclusive segmented prefix-sum.
 
     ``starts[i]`` is True where a new segment begins (data must be grouped by
     segment — i.e. pre-sorted by segment key, as in the paper's events
     pipeline).
+
+    Dtype-preserving: int32 inputs scan in int32 (exact for any magnitude),
+    so callers summing integer deltas must NOT pre-cast to float32 — f32
+    accumulation silently rounds once running values exceed 2**24 (the
+    events pipeline hits this at ~16.7M pins / huge node sizes).
     """
     flags = starts.astype(values.dtype)
-
-    def combine(a, b):
-        af, av = a
-        bf, bv = b
-        return jnp.maximum(af, bf), jnp.where(bf > 0, bv, av + bv)
-
-    _, out = jax.lax.associative_scan(combine, (flags, values), reverse=reverse)
+    _, out = jax.lax.associative_scan(scan_combine, (flags, values),
+                                      reverse=reverse)
     return out
+
+
+def apply_scan_carry(local: jax.Array, starts: jax.Array, carry_in: jax.Array) -> jax.Array:
+    """Patch a chunk-local inclusive segmented scan with the running value
+    carried in from the previous chunk: only the prefix of the chunk that
+    continues the incoming segment (no start seen yet) absorbs the carry."""
+    seen = jnp.cumsum(starts.astype(jnp.int32))
+    return jnp.where(seen == 0, local + carry_in, local)
+
+
+def sharded_segmented_scan(values: jax.Array, starts: jax.Array,
+                           axis: str | None) -> tuple[jax.Array, jax.Array]:
+    """Segmented inclusive scan over an array laid out in contiguous
+    per-device stripes along mesh axis ``axis`` (device i holds stripe i of
+    the globally sorted order, as produced by ``ShardCtx.stripe``).
+
+    Decoupled-lookback analogue across devices: each shard scans locally,
+    then exchanges a tiny ``(has-start, end-value)`` summary per shard (an
+    all-gather of two scalars — never of the data) and folds the summaries
+    of all earlier shards with the same ``scan_combine`` monoid to obtain its
+    incoming carry. Returns ``(scan values for this stripe, carry_in)``
+    where ``carry_in`` is the running value at the last element of the
+    previous stripe (0 for the first stripe / single device).
+    """
+    local = segmented_scan(values, starts)
+    zero = jnp.zeros((), values.dtype)
+    if axis is None:
+        return local, zero
+    flag = jnp.max(starts.astype(values.dtype))
+    last = local[-1]
+    flags = jax.lax.all_gather(flag, axis)   # [nshards]
+    lasts = jax.lax.all_gather(last, axis)   # [nshards]
+    cf, cv = jax.lax.associative_scan(scan_combine, (flags, lasts))
+    idx = jax.lax.axis_index(axis)
+    carry_in = jnp.where(idx > 0, cv[jnp.maximum(idx - 1, 0)], zero)
+    return apply_scan_carry(local, starts, carry_in), carry_in
 
 
 def segment_starts_from_sorted(keys: Sequence[jax.Array]) -> jax.Array:

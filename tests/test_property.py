@@ -12,12 +12,15 @@ from hypothesis import strategies as st  # noqa: E402
 
 from repro.core import generate, metrics
 from repro.core import hypergraph as H
+from repro.core import refine as R
 from repro.core.coarsen import CoarsenParams, coarsen_step
 from repro.core.contract import contract
 from repro.utils import segops
 
 SET = settings(max_examples=12, deadline=None,
                suppress_health_check=[HealthCheck.too_slow])
+
+IMAX = 2**31 - 1
 
 
 @given(n=st.integers(8, 40), e=st.integers(5, 40), k=st.integers(2, 6),
@@ -88,6 +91,54 @@ def test_segmented_scan_property(vals, seed):
             i0 = i
         np.testing.assert_allclose(out[i], v[i0:i + 1].sum(), rtol=1e-4,
                                    atol=1e-4)
+
+
+@given(n=st.integers(10, 40), e=st.integers(8, 50), k=st.integers(2, 4),
+       kparts=st.integers(2, 6), seed=st.integers(0, 1000),
+       rank_seed=st.integers(0, 3))
+@SET
+def test_build_sequence_properties(n, e, k, kparts, seed, rank_seed):
+    """`build_sequence` invariants, for the identity and arbitrary tie-break
+    permutations (replica racing uses the latter):
+      * mover `seq` values form a contiguous permutation 0..n_movers-1
+      * non-movers (and capacity padding) sit at IMAX
+      * the post-cut `pred` relation is acyclic, and within a chain
+        `seq[pred[x]] == seq[x] - 1`."""
+    rng = np.random.default_rng(seed)
+    hg = generate.random_kuniform(n, e, min(k, n), seed=seed, weighted=True)
+    caps = H.Caps.for_host(hg)
+    d = H.device_from_host(hg, caps)
+    kcap = 8
+    parts0 = rng.integers(0, kparts, size=hg.n_nodes).astype(np.int32)
+    parts = jnp.asarray(np.pad(parts0, (0, caps.n - hg.n_nodes)))
+    params = R.RefineParams(omega=max(3, n // 2), delta=4 * e)
+    pins, _ = R.pins_matrix(d, parts, caps, kcap)
+    move_to, gain_iso, _ = R.propose_moves(
+        d, parts, pins, caps, kcap, params, jnp.asarray(False),
+        jnp.int32(kparts))
+    tie_rank = None
+    if rank_seed > 0:
+        tie_rank = jnp.asarray(np.random.default_rng(rank_seed)
+                               .permutation(caps.n).astype(np.int32))
+    seq, n_movers, aux = R.build_sequence(
+        d, parts, move_to, gain_iso, caps, kcap, params,
+        tie_rank=tie_rank, with_aux=True)
+    mv = np.asarray(move_to)[: hg.n_nodes]
+    sq = np.asarray(seq)
+    nm = int(n_movers)
+    assert sorted(sq[: hg.n_nodes][mv >= 0].tolist()) == list(range(nm))
+    assert (sq[: hg.n_nodes][mv < 0] == IMAX).all()
+    assert (sq[hg.n_nodes:] == IMAX).all()
+    pred = np.asarray(aux["pred"])
+    for x in range(caps.n):
+        p, steps = x, 0
+        while pred[p] >= 0:
+            p = pred[p]
+            steps += 1
+            assert steps <= caps.n, "pred cycle survived cutting"
+    for x in range(hg.n_nodes):
+        if mv[x] >= 0 and pred[x] >= 0:
+            assert sq[pred[x]] == sq[x] - 1
 
 
 @given(seed=st.integers(0, 50), k=st.integers(2, 5))

@@ -1,14 +1,22 @@
-"""Isolation oracle for `core.refine.events_validity`: synthetic move
-sequences (arbitrary move_to / seq / gains, NOT pipeline-derived) are
-brute-force simulated in numpy, asserting the chosen prefix is the
-max-cumulative-gain prefix whose *end state* satisfies both the size (Omega)
-and distinct-inbound (Delta) constraints — violations inside the prefix
-permitted, exactly the paper's Sec. VI-D contract."""
+"""Isolation oracles for the refinement pipeline, driven by *synthetic*
+move sequences (arbitrary move_to / seq / gains, NOT pipeline-derived):
+
+* `events_validity`: numpy brute-force simulation asserting the chosen
+  prefix is the max-cumulative-gain prefix whose *end state* satisfies both
+  the size (Omega) and distinct-inbound (Delta) constraints — violations
+  inside the prefix permitted, exactly the paper's Sec. VI-D contract.
+* `inseq_gains`: numpy sequential replay applying the sequence one move at
+  a time, asserting each in-sequence gain equals the true connectivity
+  delta at its position (so every prefix sum equals the true total).
+* `build_sequence`: seeded invariants (contiguous seq permutation, IMAX
+  non-movers, acyclic post-cut pred); hypothesis variants live in
+  tests/test_property.py.
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import generate
+from repro.core import generate, metrics
 from repro.core import hypergraph as H
 from repro.core import refine as R
 
@@ -88,6 +96,132 @@ def test_events_validity_matches_numpy_oracle(seed, omega, delta):
     got = set(np.where(np.asarray(apply_mask)[: hg.n_nodes])[0])
     assert got == expect, (seed, omega, delta)
     assert abs(float(applied_gain) - expect_gain) < 1e-4
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_inseq_gains_match_sequential_replay(seed):
+    """Oracle for Eq. 14/15's exact before/after correction on *synthetic*
+    sequences: replay the moves one at a time in numpy; the in-sequence
+    gain of every move must equal the true connectivity delta at its
+    position, hence the summed gains of any prefix equal the prefix's true
+    connectivity improvement."""
+    K, kcap = 4, 8
+    rng = np.random.default_rng(seed)
+    hg = generate.random_kuniform(n_nodes=14, n_edges=12, k=3, seed=seed,
+                                  weighted=True)
+    caps = H.Caps.for_host(hg)
+    d = H.device_from_host(hg, caps)
+    parts0 = rng.integers(0, K, size=hg.n_nodes).astype(np.int32)
+    parts = jnp.asarray(np.pad(parts0, (0, caps.n - hg.n_nodes)))
+
+    mv, sq, _ = _synthetic_moves(hg, parts0, K, seed)
+    # exact isolation gains for the synthetic destinations (the Eq. 13
+    # definition: connectivity delta of the move applied alone)
+    conn0 = metrics.connectivity(hg, parts0)
+    gi = np.zeros(hg.n_nodes, np.float32)
+    for n in range(hg.n_nodes):
+        if mv[n] >= 0:
+            p2 = parts0.copy()
+            p2[n] = mv[n]
+            gi[n] = conn0 - metrics.connectivity(hg, p2)
+
+    pins, _ = R.pins_matrix(d, parts, caps, kcap)
+    pad_n = caps.n - hg.n_nodes
+    gain_seq = R.inseq_gains(
+        d, parts, pins,
+        jnp.asarray(np.pad(mv, (0, pad_n), constant_values=-1)),
+        jnp.asarray(np.pad(gi, (0, pad_n))),
+        jnp.asarray(np.pad(sq.astype(np.int32), (0, pad_n),
+                           constant_values=IMAX)),
+        caps, kcap)
+    gs = np.asarray(gain_seq)
+
+    order = [n for n in np.argsort(sq[: hg.n_nodes]) if mv[n] >= 0]
+    assert order, "synthetic sequence should have movers"
+    p_cur = parts0.copy()
+    conn_prev = conn0
+    total = 0.0
+    for n in order:
+        p_cur[n] = mv[n]
+        c = metrics.connectivity(hg, p_cur)
+        assert abs((conn_prev - c) - gs[n]) < 1e-4, (seed, n)
+        conn_prev = c
+        total += gs[n]
+    assert abs((conn0 - conn_prev) - total) < 1e-3
+
+
+def test_events_validity_int32_sizes_beyond_float32():
+    """Running size counts must accumulate in int32: with a 2**24-sized
+    node, a float32 events scan rounds `2**24 + 1` back to `2**24`, judging
+    an over-Omega prefix valid. The decisive event is the second of its
+    segment, so *any* float32 summation order gets it wrong — the test
+    fails if `events_validity` reverts to casting deltas to float32."""
+    S = 2 ** 24
+    hg = H.HostHypergraph(n_nodes=3, edge_off=np.array([0, 3]),
+                          edge_pins=np.array([0, 1, 2]),
+                          edge_nsrc=np.array([1]), edge_w=np.array([1.0]))
+    caps = H.Caps.for_host(hg)
+    d = H.device_from_host(hg, caps)
+    d.node_size = jnp.asarray(np.array([S, 1, 1], np.int32))
+    kcap = 4
+    parts = jnp.zeros((caps.n,), jnp.int32)
+    params = R.RefineParams(omega=S, delta=100)
+
+    # all three nodes move 0 -> 1 in seq order; sizes after each move:
+    # part1 = S, S+1, S+2 — only the first end-state is valid (<= Omega)
+    mv = jnp.asarray(np.array([1, 1, 1], np.int32))
+    sq = jnp.asarray(np.array([0, 1, 2], np.int32))
+    gains = jnp.asarray(np.ones(3, np.float32))
+    _, pins_in = R.pins_matrix(d, parts, caps, kcap)
+    apply_mask, applied_gain = R.events_validity(
+        d, parts, pins_in, mv, sq, gains, caps, kcap, params)
+    got = set(np.where(np.asarray(apply_mask))[0])
+    assert got == {0}, got
+    assert abs(float(applied_gain) - 1.0) < 1e-6
+
+
+def _walk_pred_acyclic(pred, n_nodes):
+    """pred must terminate (-1) within n_nodes steps from every node."""
+    for n in range(n_nodes):
+        p, steps = n, 0
+        while pred[p] >= 0:
+            p = pred[p]
+            steps += 1
+            if steps > n_nodes:
+                return False
+    return True
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_build_sequence_invariants_seeded(seed):
+    """Seeded (hypothesis-free) variant of the build_sequence properties:
+    movers get a contiguous seq permutation 0..n_movers-1, non-movers IMAX,
+    and the post-cut pred relation is acyclic with seq[pred] == seq - 1."""
+    K, kcap = 5, 8
+    rng = np.random.default_rng(seed)
+    hg = generate.random_kuniform(n_nodes=30, n_edges=40, k=4, seed=seed,
+                                  weighted=True)
+    caps = H.Caps.for_host(hg)
+    d = H.device_from_host(hg, caps)
+    parts0 = rng.integers(0, K, size=hg.n_nodes).astype(np.int32)
+    parts = jnp.asarray(np.pad(parts0, (0, caps.n - hg.n_nodes)))
+    params = R.RefineParams(omega=9, delta=35)
+    pins, _ = R.pins_matrix(d, parts, caps, kcap)
+    move_to, gain_iso, _ = R.propose_moves(
+        d, parts, pins, caps, kcap, params, jnp.asarray(False), jnp.int32(K))
+    seq, n_movers, aux = R.build_sequence(
+        d, parts, move_to, gain_iso, caps, kcap, params, with_aux=True)
+    mv = np.asarray(move_to)[: hg.n_nodes]
+    sq = np.asarray(seq)
+    nm = int(n_movers)
+    assert sorted(sq[: hg.n_nodes][mv >= 0].tolist()) == list(range(nm))
+    assert (sq[: hg.n_nodes][mv < 0] == IMAX).all()
+    assert (sq[hg.n_nodes:] == IMAX).all()
+    pred = np.asarray(aux["pred"])
+    assert _walk_pred_acyclic(pred, caps.n)
+    for n in range(hg.n_nodes):
+        if mv[n] >= 0 and pred[n] >= 0:
+            assert sq[pred[n]] == sq[n] - 1
 
 
 def test_events_validity_initially_violating_state():

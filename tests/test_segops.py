@@ -30,6 +30,46 @@ def test_segmented_scan_matches_numpy():
     np.testing.assert_allclose(out, exp, rtol=1e-5)
 
 
+def test_segmented_scan_int32_exact_beyond_float32():
+    """Int deltas must scan in int32: float32 accumulation silently rounds
+    once the running value passes 2**24 (regression for the events
+    pipeline's size/distinct counts)."""
+    vals = jnp.asarray([2 ** 24, 1, 1, 1], jnp.int32)
+    starts = jnp.asarray([True, False, False, False])
+    out = segops.segmented_scan(vals, starts)
+    assert out.dtype == jnp.int32
+    assert out.tolist() == [2 ** 24, 2 ** 24 + 1, 2 ** 24 + 2, 2 ** 24 + 3]
+    # the old float32 path rounds (tree-order, so some +1s vanish) —
+    # documents why the int path exists
+    out_f32 = segops.segmented_scan(vals.astype(jnp.float32), starts)
+    assert int(out_f32[-1]) != 2 ** 24 + 3
+
+
+def test_sharded_scan_carry_chunks_match_full():
+    """The cross-shard carry fold (scan_combine over per-chunk summaries +
+    apply_scan_carry fixup) must reproduce the monolithic segmented scan
+    when an array is split into contiguous chunks — the single-host model
+    of what `sharded_segmented_scan` does across mesh devices."""
+    rng = np.random.default_rng(3)
+    vals = rng.integers(-7, 8, size=96).astype(np.int32)
+    starts = rng.random(96) < 0.2
+    starts[0] = True
+    full = np.asarray(segops.segmented_scan(jnp.asarray(vals),
+                                            jnp.asarray(starts)))
+    for nchunks in (2, 3, 4, 8):
+        got = []
+        carry = (jnp.int32(0), jnp.int32(0))  # (has-start, value) summary
+        for c in range(nchunks):
+            lo, hi = c * 96 // nchunks, (c + 1) * 96 // nchunks
+            v, s = jnp.asarray(vals[lo:hi]), jnp.asarray(starts[lo:hi])
+            local = segops.segmented_scan(v, s)
+            fixed = segops.apply_scan_carry(local, s, carry[1])
+            got.append(np.asarray(fixed))
+            carry = segops.scan_combine(
+                carry, (jnp.max(s.astype(jnp.int32)), local[-1]))
+        np.testing.assert_array_equal(np.concatenate(got), full)
+
+
 def test_scatter_compact():
     data = jnp.asarray([5, 6, 7, 8, 9], jnp.int32)
     flags = jnp.asarray([True, False, True, True, False])
