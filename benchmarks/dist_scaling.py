@@ -1,13 +1,15 @@
-"""Refinement wall-time vs device count (the paper's hierarchical-
-parallelism claim, Sec. VI, measured on forced host devices).
+"""Coarsen + refine wall-time vs device count (the paper's hierarchical-
+parallelism claim, Secs. V-VI, measured on forced host devices).
 
 Each device count runs in a fresh subprocess (XLA device topology is fixed
 at backend init), partitions the same SNN hypergraph through
 `dist.partition` with a (1, n)-mesh Plan — all devices shard the pins/pairs
-pipelines — and reports the second run's refine wall-time (first run pays
-compile). On this CPU container the "devices" are host threads, so the
-numbers chart overhead/scaling shape rather than real speedup; on an
-accelerator mesh the same harness measures the real thing.
+pipelines of both coarsening and refinement — and reports the second run's
+per-phase wall-times (first run pays compile): a coarsen-phase column and a
+refine-phase column per device count. On this CPU container the "devices"
+are host threads, so the numbers chart overhead/scaling shape rather than
+real speedup; on an accelerator mesh the same harness measures the real
+thing.
 
   PYTHONPATH=src python -m benchmarks.dist_scaling
   PYTHONPATH=src python -m benchmarks.run --only dist
@@ -41,6 +43,7 @@ _CHILD = textwrap.dedent("""
         res = partition(hg, omega=24, delta=96, theta=4, plan=plan,
                         race=False)
     print(json.dumps(dict(refine_s=res.timings["refine"],
+                          coarsen_s=res.timings["coarsen"],
                           total_s=res.timings["total"],
                           connectivity=res.connectivity,
                           n_parts=res.n_parts)))
@@ -76,7 +79,8 @@ def run() -> list[str]:
                if base else "rel_dev1=n/a")
         out.append(row(
             f"dist_scaling/dev{n}", m["refine_s"] * 1e6,
-            f"refine_s={m['refine_s']:.3f} total_s={m['total_s']:.3f} "
+            f"coarsen_s={m['coarsen_s']:.3f} refine_s={m['refine_s']:.3f} "
+            f"total_s={m['total_s']:.3f} "
             f"conn={m['connectivity']:.0f} {rel}"))
     return out
 

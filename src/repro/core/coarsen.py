@@ -21,6 +21,16 @@ Candidate quality mechanisms reproduced from the paper: symmetric
 deterministic noise capped at 10% of mean edge weight; top-Pi candidates per
 node (Pi proposal graphs / matching rounds); best-effort pairing of nodes
 with no valid candidates (size-sorted, union size overestimated by sums).
+
+Every pins/pairs-sized stage threads an optional `segops.ShardCtx` (mirror
+of `core.refine`): inside `dist.partition`'s shard_map the pair expansion,
+the neighborhood binary searches and the Pi-round candidate argmaxes run on
+one contiguous lane stripe per device. Integer partials (inter, matching
+counts) combine with psum, per-node (value, id) claims with an exact
+lexicographic pmax, and float partials (eta) gather their lane columns in
+stripe order so the accumulation order — and hence every last bit — matches
+the single-device path. With the default ctx everything below is the exact
+single-device computation.
 """
 from __future__ import annotations
 
@@ -49,6 +59,12 @@ class CoarsenParams:
     use_kernels: bool = False  # route scoring through the Pallas kernels
     matching: str = "exact"    # "exact" DP | "greedy" (ablation, [22])
 
+    def __post_init__(self):
+        if self.matching not in ("exact", "greedy"):
+            raise ValueError(
+                "CoarsenParams.matching must be 'exact' or 'greedy', got "
+                f"{self.matching!r}")
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
@@ -61,23 +77,33 @@ class Proposals:
 
 
 def score_slots(d: DeviceHypergraph, nbrs: Neighborhoods,
-                pairs: PairExpansion, caps: Caps):
-    """eta + inter accumulated over materialized neighbor slots."""
+                pairs: PairExpansion, caps: Caps,
+                ctx: segops.ShardCtx = segops.ShardCtx()):
+    """eta + inter accumulated over materialized neighbor slots.
+
+    ``pairs`` may be one shard's lane stripe (``build_pairs`` with
+    ``idx=ctx.lanes(caps.pairs)``): the binary searches run stripe-local;
+    the integer ``inter`` partials psum exactly, while the float ``eta``
+    lanes gather in stripe order — the global lane order — so the scatter
+    accumulation order (and hence every bit) matches one device."""
     n_safe = jnp.clip(pairs.n, 0, caps.n - 1)
     lo = nbrs.off[n_safe]
     hi = nbrs.off[jnp.clip(pairs.n + 1, 0, caps.n)]
     iters = max(1, math.ceil(math.log2(caps.nbrs + 1)) + 1)
     slot = segops.searchsorted_segmented(nbrs.ids, lo, hi, pairs.m, iters)
     slot = jnp.where(pairs.valid, slot, caps.nbrs)
-    eta = jax.ops.segment_sum(pairs.w_norm, slot, num_segments=caps.nbrs + 1)[: caps.nbrs]
-    inter = jax.ops.segment_sum(pairs.both_dst.astype(jnp.int32), slot,
-                                num_segments=caps.nbrs + 1)[: caps.nbrs]
+    eta = jax.ops.segment_sum(ctx.gather(pairs.w_norm), ctx.gather(slot),
+                              num_segments=caps.nbrs + 1)[: caps.nbrs]
+    inter = ctx.psum(jax.ops.segment_sum(
+        pairs.both_dst.astype(jnp.int32), slot,
+        num_segments=caps.nbrs + 1))[: caps.nbrs]
     return eta, inter
 
 
 def propose(d: DeviceHypergraph, nbrs: Neighborhoods, pairs: PairExpansion,
-            caps: Caps, params: CoarsenParams) -> Proposals:
-    if params.use_kernels:
+            caps: Caps, params: CoarsenParams,
+            ctx: segops.ShardCtx = segops.ShardCtx()) -> Proposals:
+    if params.use_kernels and ctx.axis is None:
         from repro.kernels.pair_scores import ops as ps_ops
         # tile bounds are level-0 derived; guard + fall back (see ops.py)
         eta, inter = jax.lax.cond(
@@ -85,7 +111,7 @@ def propose(d: DeviceHypergraph, nbrs: Neighborhoods, pairs: PairExpansion,
             lambda: ps_ops.score_slots_kernel(d, nbrs, pairs, caps),
             lambda: score_slots(d, nbrs, pairs, caps))
     else:
-        eta, inter = score_slots(d, nbrs, pairs, caps)
+        eta, inter = score_slots(d, nbrs, pairs, caps, ctx)
 
     owner = segops.rows_from_offsets(nbrs.off, caps.nbrs, caps.n)
     m = nbrs.ids
@@ -103,17 +129,28 @@ def propose(d: DeviceHypergraph, nbrs: Neighborhoods, pairs: PairExpansion,
     valid_slot = entry_live & size_ok & inbound_ok
 
     value = jnp.where(valid_slot, eta_n, NEG)
-    slot_ids = jnp.arange(caps.nbrs, dtype=jnp.int32)
+
+    # Pi candidate rounds on lane-local slot stripes: each shard argmaxes
+    # its contiguous stripe of the slot space, winners combine with the
+    # exact cross-shard lexicographic (value, slot-id) pmax, and the shard
+    # owning the winning slot retires it for the next round.
+    sl, sl_ok = ctx.lanes(caps.nbrs)
+    owner_l = owner_safe[jnp.clip(sl, 0, caps.nbrs - 1)]
+    value_l = ctx.take(value, sl, sl_ok, NEG)
+    per = sl.shape[0]
 
     cand_ids, cand_scores = [], []
     for _ in range(params.n_cands):
-        mx, arg_slot = segops.segment_argmax(
-            value, slot_ids, owner_safe, caps.n, valid=value > NEG)
+        mx_l, arg_l = segops.segment_argmax(
+            value_l, sl, owner_l, caps.n, valid=value_l > NEG)
+        mx, arg_slot = ctx.pmax_pair(mx_l, arg_l)
         got = (arg_slot >= 0) & ~jnp.isneginf(mx)
         cid = jnp.where(got, m[jnp.clip(arg_slot, 0, caps.nbrs - 1)], -1)
         cand_ids.append(cid)
         cand_scores.append(jnp.where(got, mx, 0.0))
-        value = value.at[jnp.where(got, arg_slot, caps.nbrs)].set(NEG, mode="drop")
+        loc = arg_slot - sl[0]
+        value_l = value_l.at[jnp.where(got & (loc >= 0) & (loc < per),
+                                       loc, per)].set(NEG, mode="drop")
 
     return Proposals(cand_ids=jnp.stack(cand_ids),
                      cand_scores=jnp.stack(cand_scores),
@@ -121,7 +158,8 @@ def propose(d: DeviceHypergraph, nbrs: Neighborhoods, pairs: PairExpansion,
 
 
 def run_matching_rounds(props: Proposals, d: DeviceHypergraph, caps: Caps,
-                        params: CoarsenParams) -> jax.Array:
+                        params: CoarsenParams,
+                        ctx: segops.ShardCtx = segops.ShardCtx()) -> jax.Array:
     """Pi rounds of exact matching; matched nodes leave subsequent graphs."""
     ids = jnp.arange(caps.n, dtype=jnp.int32)
     live0 = ids < d.n_nodes
@@ -138,7 +176,7 @@ def run_matching_rounds(props: Proposals, d: DeviceHypergraph, caps: Caps,
             m_round = jnp.where(mutual, tgt, -1)
         else:
             m_round = match_pseudoforest(tgt, props.cand_scores[pi],
-                                         unmatched)
+                                         unmatched, ctx)
         match = jnp.where((match < 0) & (m_round >= 0), m_round, match)
     return match
 
@@ -164,19 +202,28 @@ def pair_isolated(match: jax.Array, props: Proposals, d: DeviceHypergraph,
     return match
 
 
-@partial(jax.jit, static_argnames=("caps", "params"))
-def coarsen_step(d: DeviceHypergraph, caps: Caps, params: CoarsenParams):
+def coarsen_step_impl(d: DeviceHypergraph, caps: Caps, params: CoarsenParams,
+                      ctx: segops.ShardCtx = segops.ShardCtx()):
     """One full coarsening level: neighbors -> proposals -> matching.
 
-    Returns (match[Ncap], n_matched_pairs, proposals) — contraction happens
-    in `repro.core.contract`.
-    """
+    Single source of truth for the jitted single-device ``coarsen_step``
+    and ``dist.partition.coarsen_level``'s shard_map'd body (``ctx`` stripes
+    the pairs/slot pipelines; the isolated-node pairing sort stays
+    replicated — its inputs are node-sized and already replicated)."""
     from repro.core.hypergraph import build_neighbors, build_pairs
 
-    pairs = build_pairs(d, caps)
-    nbrs = build_neighbors(pairs, d, caps)
-    props = propose(d, nbrs, pairs, caps, params)
-    match = run_matching_rounds(props, d, caps, params)
+    pidx, pidx_ok = ctx.lanes(caps.pairs)
+    pairs = build_pairs(d, caps, idx=pidx, idx_ok=pidx_ok)
+    nbrs = build_neighbors(pairs, d, caps, ctx)
+    props = propose(d, nbrs, pairs, caps, params, ctx)
+    match = run_matching_rounds(props, d, caps, params, ctx)
     match = pair_isolated(match, props, d, caps, params)
     n_pairs = jnp.sum((match >= 0) & (jnp.arange(caps.n) < d.n_nodes)) // 2
     return match, n_pairs, props
+
+
+@partial(jax.jit, static_argnames=("caps", "params"))
+def coarsen_step(d: DeviceHypergraph, caps: Caps, params: CoarsenParams):
+    """Returns (match[Ncap], n_matched_pairs, proposals) — contraction
+    happens in `repro.core.contract`."""
+    return coarsen_step_impl(d, caps, params)

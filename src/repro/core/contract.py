@@ -7,9 +7,24 @@ src(.)/out(.)"), preserving inbound-set correctness and no-self-cycle.
 
 GPU version: per-set hash-set dedup in shared+global memory, then
 prefix-sum packing. TPU adaptation: stable multi-key sort + boundary flags +
-prefix-sum compaction — identical result, deterministic, static shapes.
-Edge ids and weights are preserved level-over-level (the edge *multiset*
-keeps its identity; only pin segments shrink), exactly as in the paper.
+prefix-sum compaction — identical result, deterministic, static shapes. The
+repack into the src-first pin layout is a pair of segmented rank scans over
+the sorted order (src rank / dst rank within each edge) plus a scatter to
+``edge_off_new[e] + rank`` — the literal prefix-sum packing of the paper,
+replacing a second full sort. Edge ids and weights are preserved
+level-over-level (the edge *multiset* keeps its identity; only pin segments
+shrink), exactly as in the paper.
+
+Sharding (``ctx`` a ``segops.ShardCtx``, inside ``dist.partition``'s
+shard_map): key construction runs on per-shard contiguous pin-lane stripes
+(CSR row ids via stripe-local binary search), the sort gathers its compact
+key columns (same compromise as the refinement events sort; a distributed
+sort is an open ROADMAP item), the rank scans run stripe-local with
+cross-shard carries (``sharded_segmented_scan``), and the packed pins /
+per-edge / per-node counts combine by psum of disjoint (or integer) dense
+partials. Every value in this pipeline is an integer, so the sharded
+contraction is bit-exact with the single-device one by construction — no
+float accumulation order to preserve.
 """
 from __future__ import annotations
 
@@ -24,8 +39,16 @@ from repro.utils import segops
 IMAX = jnp.int32(2**31 - 1)
 
 
-@partial(jax.jit, static_argnames=("caps",))
-def contract(d: DeviceHypergraph, match: jax.Array, caps: Caps):
+def _role_key(is_dst: jax.Array) -> jax.Array:
+    """Secondary sort key within an (edge, coarse-pin) duplicate group: dst
+    (0) sorts before src (1), so the kept first occurrence carries the dst
+    role whenever the merged pin had both (paper V-E: duplicates are
+    discarded from src)."""
+    return jnp.where(is_dst, 0, 1)
+
+
+def contract_impl(d: DeviceHypergraph, match: jax.Array, caps: Caps,
+                  ctx: segops.ShardCtx = segops.ShardCtx()):
     """Returns (coarse DeviceHypergraph, gamma[Ncap] old->coarse id)."""
     ids = jnp.arange(caps.n, dtype=jnp.int32)
     live = ids < d.n_nodes
@@ -42,55 +65,80 @@ def contract(d: DeviceHypergraph, match: jax.Array, caps: Caps):
         num_segments=caps.n + 1)[: caps.n].astype(jnp.int32)
 
     # ---- coarse edge pins: map through gamma, dedup, src-first repack ----
-    t = jnp.arange(caps.p, dtype=jnp.int32)
-    pin_live = t < d.n_pins
-    e_of = segops.rows_from_offsets(d.edge_off, caps.p, caps.e)
+    # key construction on this shard's contiguous pin-lane stripe
+    t, t_in = ctx.lanes(caps.p)
+    tp = jnp.clip(t, 0, caps.p - 1)
+    pin_live = t_in & (t < d.n_pins)
+    e_of = ctx.rows(d.edge_off, t, caps.p, caps.e)
     e_safe = jnp.clip(e_of, 0, caps.e - 1)
-    pin = jnp.clip(d.edge_pins, 0, caps.n - 1)
+    pin = jnp.clip(d.edge_pins[tp], 0, caps.n - 1)
     pprime = jnp.where(pin_live, gamma[pin], IMAX)
     rel = t - d.edge_off[e_safe]
     is_dst = pin_live & (rel >= d.edge_nsrc[e_safe])
 
-    k_e = jnp.where(pin_live, e_of, IMAX)
-    k_p = pprime
-    k_r = jnp.where(is_dst, 0, 1)  # dst sorts first within (e, p')
+    k_e = ctx.gather(jnp.where(pin_live, e_of, IMAX))
+    k_p = ctx.gather(pprime)
+    k_r = ctx.gather(_role_key(is_dst))
     (se, sp, sr), _ = segops.sort_by([k_e, k_p, k_r], [jnp.zeros_like(k_e)])
     starts = segops.segment_starts_from_sorted([se, sp])
+    e_start = segops.segment_starts_from_sorted([se])
     keep = starts & (se != IMAX) & (sp != IMAX)
-    kept_dst = sr == 0  # first occurrence carries the merged role
+    kept_dst = keep & (sr == 0)  # first occurrence carries the merged role
+    kept_src = keep & (sr == 1)
 
-    c_e = jnp.where(keep, se, IMAX)
-    c_p = jnp.where(keep, sp, IMAX)
-    c_role = jnp.where(keep, jnp.where(kept_dst, 1, 0), 2)  # src=0 < dst=1
-    (fe, frole, fp), _ = segops.sort_by([c_e, c_role, c_p],
-                                        [jnp.zeros_like(c_e)])
-    pins_new = jnp.where(fe != IMAX, fp, NSENT)
-    seg_e = jnp.where(fe != IMAX, fe, caps.e)
-    counts_e = jax.ops.segment_sum(jnp.ones((caps.p,), jnp.int32), seg_e,
-                                   num_segments=caps.e + 1)[: caps.e]
-    nsrc_new = jax.ops.segment_sum(
-        jnp.where(frole == 0, 1, 0), seg_e, num_segments=caps.e + 1)[: caps.e]
+    # per-edge counts from the kept set (integers — psum is exact)
+    se_l = ctx.stripe(se)
+    sp_l = ctx.stripe(sp)
+    keep_l = ctx.stripe(keep)
+    kept_src_l = ctx.stripe(kept_src)
+    kept_dst_l = ctx.stripe(kept_dst)
+    seg_e = jnp.where(keep_l, se_l, caps.e)
+    ones_l = jnp.ones(se_l.shape, jnp.int32)
+    counts_e = ctx.psum(jax.ops.segment_sum(
+        ones_l, seg_e, num_segments=caps.e + 1))[: caps.e]
+    nsrc_new = ctx.psum(jax.ops.segment_sum(
+        kept_src_l.astype(jnp.int32), seg_e,
+        num_segments=caps.e + 1))[: caps.e]
     edge_off_new = segops.offsets_from_counts(counts_e).astype(jnp.int32)
     n_pins_new = edge_off_new[caps.e]
 
+    # prefix-sum packing: src/dst rank within each edge via stripe-local
+    # segmented scans with cross-shard carries, then a disjoint scatter to
+    # edge_off_new[e] (+ nsrc for dst) + rank — src pins first, coarse-id
+    # ascending within each role (the kept order is already p'-ascending)
+    e_start_l = ctx.stripe(e_start)
+    src_rank, _ = ctx.segmented_scan(kept_src_l.astype(jnp.int32), e_start_l)
+    dst_rank, _ = ctx.segmented_scan(kept_dst_l.astype(jnp.int32), e_start_l)
+    se_safe = jnp.clip(se_l, 0, caps.e - 1)
+    pos = jnp.where(kept_src_l, edge_off_new[se_safe] + src_rank - 1,
+                    edge_off_new[se_safe] + nsrc_new[se_safe] + dst_rank - 1)
+    pos = jnp.where(keep_l, pos, caps.p).astype(jnp.int32)
+    pins_dense = ctx.psum(jnp.zeros((caps.p + 1,), jnp.int32)
+                          .at[pos].add(jnp.where(keep_l, sp_l, 0))[: caps.p])
+    slot = jnp.arange(caps.p, dtype=jnp.int32)
+    pins_new = jnp.where(slot < n_pins_new, pins_dense, NSENT)
+
     # ---- incidence rebuild (inbound first) -------------------------------
-    t2_live = t < n_pins_new
-    e2 = segops.rows_from_offsets(edge_off_new, caps.p, caps.e)
+    t2_live = t_in & (t < n_pins_new)
+    e2 = ctx.rows(edge_off_new, t, caps.p, caps.e)
     e2_safe = jnp.clip(e2, 0, caps.e - 1)
     rel2 = t - edge_off_new[e2_safe]
     isdst2 = t2_live & (rel2 >= nsrc_new[e2_safe])
-    node2 = jnp.where(t2_live, pins_new, IMAX)
-    inkey = jnp.where(isdst2, 0, 1)  # inbound edges first per node
+    node2 = ctx.gather(ctx.take(pins_new, t, t2_live, IMAX))
+    inkey = ctx.gather(jnp.where(isdst2, 0, 1))  # inbound edges first
+    key_e = ctx.gather(jnp.where(t2_live, e2, IMAX))
     (sn2, sk2, se2), (sin2,) = segops.sort_by(
-        [node2, inkey, jnp.where(t2_live, e2, IMAX)],
-        [isdst2.astype(jnp.int32)])
-    node_edges_new = jnp.where(sn2 != IMAX, se2, NSENT)
-    node_is_in_new = (sin2 == 1) & (sn2 != IMAX)
-    segn = jnp.where(sn2 != IMAX, sn2, caps.n)
-    counts_n = jax.ops.segment_sum(jnp.ones((caps.p,), jnp.int32), segn,
-                                   num_segments=caps.n + 1)[: caps.n]
-    nin_new = jax.ops.segment_sum(node_is_in_new.astype(jnp.int32), segn,
-                                  num_segments=caps.n + 1)[: caps.n]
+        [node2, inkey, key_e], [ctx.gather(isdst2.astype(jnp.int32))])
+    node_edges_new = jnp.where(sn2 != IMAX, se2, NSENT)[: caps.p]
+    node_is_in_new = ((sin2 == 1) & (sn2 != IMAX))[: caps.p]
+    sn2_l = ctx.stripe(sn2)
+    segn = jnp.where(sn2_l != IMAX, sn2_l, caps.n)
+    counts_n = ctx.psum(jax.ops.segment_sum(
+        jnp.ones(sn2_l.shape, jnp.int32), segn,
+        num_segments=caps.n + 1))[: caps.n]
+    nin_new = ctx.psum(jax.ops.segment_sum(
+        ((ctx.stripe(sin2) == 1) & (sn2_l != IMAX)).astype(jnp.int32), segn,
+        num_segments=caps.n + 1))[: caps.n]
     node_off_new = segops.offsets_from_counts(counts_n).astype(jnp.int32)
 
     d_new = DeviceHypergraph(
@@ -108,3 +156,10 @@ def contract(d: DeviceHypergraph, match: jax.Array, caps: Caps):
         n_pins=n_pins_new.astype(jnp.int32),
     )
     return d_new, gamma
+
+
+@partial(jax.jit, static_argnames=("caps",))
+def contract(d: DeviceHypergraph, match: jax.Array, caps: Caps):
+    """Single-device entry point; `dist.partition.contract_level` runs the
+    same `contract_impl` under shard_map with a mesh-axis ctx."""
+    return contract_impl(d, match, caps)

@@ -298,17 +298,26 @@ class Neighborhoods:
     n_entries: jax.Array  # scalar int32
 
 
-def build_neighbors(pairs: PairExpansion, d: DeviceHypergraph, caps: Caps) -> Neighborhoods:
+def build_neighbors(pairs: PairExpansion, d: DeviceHypergraph, caps: Caps,
+                    ctx=None) -> Neighborhoods:
     """Sort-dedup the pair expansion into unique (n, m) adjacency.
 
     TPU adaptation of the paper's one-time hash-set construction: a stable
     two-key sort + boundary flags + compaction gives the same deduplicated
     CSR with deterministic ordering.
+
+    ``ctx`` (a ``segops.ShardCtx``): ``pairs`` is then one shard's lane
+    stripe and the key columns gather in stripe order — the global lane
+    order — before the replicated sort (same gathered-sort compromise as
+    the refinement events pipeline; a distributed sort is an open ROADMAP
+    item), so the result is bit-identical to the single-device build.
     """
     from repro.utils import segops
 
-    keyn = jnp.where(pairs.valid, pairs.n, NSENT)
-    keym = jnp.where(pairs.valid, pairs.m, NSENT)
+    if ctx is None:
+        ctx = segops.ShardCtx()
+    keyn = ctx.gather(jnp.where(pairs.valid, pairs.n, NSENT))
+    keym = ctx.gather(jnp.where(pairs.valid, pairs.m, NSENT))
     (skn, skm), _ = segops.sort_by([keyn, keym], [jnp.zeros_like(keyn)])
     starts = segops.segment_starts_from_sorted([skn, skm])
     keep = starts & (skn != NSENT)

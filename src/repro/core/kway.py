@@ -20,12 +20,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import metrics
-from repro.core.contract import contract
-from repro.core.coarsen import CoarsenParams, coarsen_step
+from repro.core.coarsen import CoarsenParams
 from repro.core.hypergraph import (Caps, HostHypergraph, device_from_host,
                                    host_from_device)
 from repro.core.partitioner import (PartitionResult, _next_pow2,
-                                    make_refine_fn)
+                                    make_coarsen_fns, make_refine_fn)
 from repro.core.refine import RefineParams
 
 BIG_DELTA = 2 ** 29
@@ -67,12 +66,15 @@ def partition_kway(hg: HostHypergraph, k: int, eps: float = 0.03,
                    collect_log: bool = False,
                    max_levels: int = 64,
                    plan=None, race: bool = True,
-                   race_seed: int = 0) -> PartitionResult:
+                   race_seed: int = 0,
+                   dist_coarsen: bool = True) -> PartitionResult:
     """k-way balanced partitioning; cut-net results from minimizing
     connectivity, exactly as the paper frames it.
 
-    plan/race/race_seed mirror `partitioner.partition`: with a `Plan`, each
-    refinement level runs as mesh-raced replicas with sharded pipelines via
+    plan/race/race_seed/dist_coarsen mirror `partitioner.partition`: with a
+    `Plan`, each coarsening level runs mesh-sharded via
+    `dist.partition.coarsen_level`/`contract_level` and each refinement
+    level as mesh-raced replicas with sharded pipelines via
     `dist.partition.refine_level`."""
     t0 = time.perf_counter()
     omega = max(int((1 + eps) * hg.n_nodes / k), math.ceil(hg.n_nodes / k))
@@ -84,12 +86,13 @@ def partition_kway(hg: HostHypergraph, k: int, eps: float = 0.03,
         coarse_target = min(4096, max(4 * k, 64))
 
     levels, gammas, log = [], [], []
+    _coarsen, _contract = make_coarsen_fns(cparams, plan, dist_coarsen)
     t_coarsen = time.perf_counter()
     while int(d.n_nodes) > coarse_target and len(gammas) < max_levels:
-        match, n_pairs, _ = coarsen_step(d, caps, cparams)
+        match, n_pairs = _coarsen(d, caps)
         if int(n_pairs) == 0:
             break
-        d2, gamma = contract(d, match, caps)
+        d2, gamma = _contract(d, match, caps)
         if collect_log:
             log.append(dict(kind="coarsen", level=len(gammas),
                             nodes=int(d.n_nodes), pairs=int(n_pairs)))

@@ -21,7 +21,19 @@ stall on a longer cycle. We then deterministically cut the outgoing edge of
 every stalled node whose (score, id) key is smaller than its target's —
 at least one such edge exists on any cycle, so progress is guaranteed; the
 cut node becomes a tree root. Round 1 under exact symmetry never stalls, so
-the paper's exactness claim is preserved where it applies.
+the paper's exactness claim is preserved where it applies. The cut is
+applied as a mask (empty whenever any node is ready) rather than a
+``lax.cond`` so the sharded reductions below stay structurally uniform —
+every wavefront iteration executes the same collectives on every shard.
+
+Sharding (``ctx`` a ``segops.ShardCtx``, inside ``dist.partition``'s
+shard_map): the DP state stays replicated; each wavefront iteration stripes
+the *child lanes* across shards and combines per-parent reductions so the
+DP stays exact: integer child counts psum (exact), per-parent (value, id)
+claims take a cross-shard lexicographic pmax (exact — pure maxes), and the
+float ``sum0`` pushes gather their (segment, value) lane columns in stripe
+order — the global child order — so the scatter accumulation is
+bit-identical to the single-device sweep (a float psum would not be).
 """
 from __future__ import annotations
 
@@ -29,6 +41,8 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+
+from repro.utils import segops
 
 NEG = jnp.float32(-jnp.inf)
 
@@ -45,18 +59,9 @@ class _State:
     stall_guard: jax.Array
 
 
-def _seg_best(values, ids, seg, num, valid):
-    """(max value, larger-id tie-break) per segment; (-inf, -1) if empty."""
-    v = jnp.where(valid, values, NEG)
-    mx = jax.ops.segment_max(v, seg, num_segments=num)
-    mx = jnp.nan_to_num(mx, neginf=float("-inf"))
-    hit = valid & (v == mx[seg]) & ~jnp.isneginf(v)
-    arg = jax.ops.segment_max(jnp.where(hit, ids, -1), seg, num_segments=num)
-    return mx, arg
-
-
 def match_pseudoforest(target: jax.Array, score: jax.Array,
-                       live: jax.Array) -> jax.Array:
+                       live: jax.Array,
+                       ctx: segops.ShardCtx = segops.ShardCtx()) -> jax.Array:
     """Returns match[Ncap] int32: partner id, or -1 if unmatched.
 
     target: proposed partner per node (-1 = no proposal). score: eta of the
@@ -71,11 +76,43 @@ def match_pseudoforest(target: jax.Array, score: jax.Array,
 
     # 2-cycle roots (paper: all cycles have length two under the invariant)
     root_pair = tgt_live & (target[t_safe] == ids)
-    seg_parent = jnp.where(tgt_live, target, ncap)  # ncap = drop bucket
 
-    cnt0 = jax.ops.segment_sum(
-        jnp.where(tgt_live & ~root_pair, 1, 0), seg_parent,
-        num_segments=ncap + 1)[:ncap].astype(jnp.int32)
+    # this shard's contiguous stripe of child lanes (all lanes on one device)
+    ch, ch_in = ctx.lanes(ncap)
+    ch_safe = jnp.clip(ch, 0, ncap - 1)
+
+    def count_children(mask):
+        """#children per parent from a replicated child mask (int, psum)."""
+        seg = jnp.where(ctx.take(mask, ch, ch_in, False),
+                        target[ch_safe], ncap)
+        return ctx.psum(jax.ops.segment_sum(
+            jnp.ones(ch.shape, jnp.int32), seg,
+            num_segments=ncap + 1))[:ncap]
+
+    def sum_children(mask, values):
+        """Float sum per parent: lanes gather in stripe order (= global
+        child order) so the accumulation is bit-identical to one device."""
+        msk = ctx.take(mask, ch, ch_in, False)
+        seg = jnp.where(msk, target[ch_safe], ncap)
+        val = jnp.where(msk, values[ch_safe], 0.0)
+        return jax.ops.segment_sum(ctx.gather(val), ctx.gather(seg),
+                                   num_segments=ncap + 1)[:ncap]
+
+    def best_children(values, mask):
+        """(max value, larger-id tie-break) per parent; (-inf, -1) if
+        empty. Cross-shard combine is a pure (value, id) max — exact."""
+        msk = ctx.take(mask, ch, ch_in, False)
+        seg = jnp.where(msk, target[ch_safe], ncap)
+        v = jnp.where(msk, values[ch_safe], NEG)
+        mx = ctx.pmax(jax.ops.segment_max(v, seg, num_segments=ncap + 1)[:ncap])
+        mx = jnp.nan_to_num(mx, neginf=float("-inf"))
+        hit = msk & (v == mx[jnp.clip(seg, 0, ncap - 1)]) & ~jnp.isneginf(v) \
+            & (seg < ncap)
+        arg = ctx.pmax(jax.ops.segment_max(
+            jnp.where(hit, ch, -1), seg, num_segments=ncap + 1)[:ncap])
+        return mx, arg
+
+    cnt0 = count_children(tgt_live & ~root_pair)
 
     st = _State(
         done=~live,
@@ -86,6 +123,10 @@ def match_pseudoforest(target: jax.Array, score: jax.Array,
         has_parent=tgt_live & ~root_pair,
         stall_guard=jnp.int32(0),
     )
+
+    # deterministic cycle-cut key: cut n when key(n) < key(target(n))
+    k_lt = (score < score[t_safe]) | (
+        (score == score[t_safe]) & (ids < target))
 
     def pending(s):
         return live & ~s.done & ~root_pair
@@ -102,39 +143,25 @@ def match_pseudoforest(target: jax.Array, score: jax.Array,
                                                     0.0, s.bestval))
         ss1_r = score + s.sum0
         push = ready & s.has_parent
-        seg = jnp.where(push, target, ncap)
-        sum0 = s.sum0 + jax.ops.segment_sum(
-            jnp.where(push, ss0_r, 0.0), seg, num_segments=ncap + 1)[:ncap]
-        val = ss1_r - ss0_r
-        nv, ni = _seg_best(val, ids, seg, ncap + 1, push)
-        nv, ni = nv[:ncap], ni[:ncap]
+        sum0 = s.sum0 + sum_children(push, ss0_r)
+        nv, ni = best_children(ss1_r - ss0_r, push)
         better = (nv > s.bestval) | ((nv == s.bestval) & (ni > s.bestid))
         bestval = jnp.where(better, nv, s.bestval)
         bestid = jnp.where(better, ni, s.bestid)
-        # parent bookkeeping: every finalized child (pushed or cut) ticks cnt
-        seg_all = jnp.where(ready & tgt_live & ~root_pair, target, ncap)
-        cnt = s.cnt - jax.ops.segment_sum(
-            jnp.ones((ncap,), jnp.int32), seg_all, num_segments=ncap + 1)[:ncap]
         done = s.done | ready
 
-        # stall => deterministic cycle cut (key(n) < key(target(n)))
-        def do_cut(s_cut):
-            k_lt = (score < score[t_safe]) | (
-                (score == score[t_safe]) & (ids < target))
-            cut = pend & ~ready & k_lt & s_cut.has_parent
-            # a cut child no longer blocks nor feeds its parent
-            segc = jnp.where(cut, target, ncap)
-            cntc = s_cut.cnt - jax.ops.segment_sum(
-                jnp.ones((ncap,), jnp.int32), segc,
-                num_segments=ncap + 1)[:ncap]
-            return dataclasses.replace(
-                s_cut, cnt=cntc, has_parent=s_cut.has_parent & ~cut,
-                stall_guard=s_cut.stall_guard + 1)
-
-        new = _State(done=done, cnt=cnt, sum0=sum0, bestval=bestval,
-                     bestid=bestid, has_parent=s.has_parent,
-                     stall_guard=s.stall_guard)
-        return jax.lax.cond(any_ready, lambda x: x, do_cut, new)
+        # stall => deterministic cycle cut; the mask is empty on any
+        # progress round, so this is the lax.cond of the single-device
+        # version unrolled into uniform (always-executed) reductions.
+        # parent bookkeeping: every finalized child (pushed or cut) ticks
+        # cnt — the ready and cut masks are disjoint (ready vs ~ready), so
+        # one merged count covers both at the original cost
+        cut = pend & ~ready & k_lt & s.has_parent & ~any_ready
+        cnt = s.cnt - count_children((ready & tgt_live & ~root_pair) | cut)
+        return _State(done=done, cnt=cnt, sum0=sum0, bestval=bestval,
+                      bestid=bestid, has_parent=s.has_parent & ~cut,
+                      stall_guard=s.stall_guard
+                      + jnp.where(any_ready, 0, 1).astype(jnp.int32))
 
     st = jax.lax.while_loop(cond, body, st)
 

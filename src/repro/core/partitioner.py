@@ -44,6 +44,32 @@ def _next_pow2(x: int) -> int:
     return 1 << max(0, math.ceil(math.log2(max(1, x))))
 
 
+def make_coarsen_fns(cparams: CoarsenParams, plan, dist_coarsen: bool = True):
+    """Per-level coarsening dispatchers shared by `partition` and
+    `kway.partition_kway`: returns `(coarsen(d, caps) -> (match, n_pairs),
+    contract(d, match, caps) -> (d2, gamma))`. With a `Plan` (and
+    `dist_coarsen`), both run on the mesh via `dist.partition.coarsen_level`
+    / `contract_level` — bit-exact with the single-device pair when
+    `use_kernels=False` (the mesh path replaces the Pallas kernels with the
+    striped pipeline, whose eta fp order differs from the kernel's)."""
+    if plan is None or not dist_coarsen:
+        def _coarsen(d_, caps_):
+            match, n_pairs, _ = coarsen_step(d_, caps_, cparams)
+            return match, n_pairs
+
+        def _contract(d_, match_, caps_):
+            return contract(d_, match_, caps_)
+    else:
+        import repro.dist.partition as dist_partition
+
+        def _coarsen(d_, caps_):
+            return dist_partition.coarsen_level(d_, caps_, cparams, plan)
+
+        def _contract(d_, match_, caps_):
+            return dist_partition.contract_level(d_, match_, caps_, plan)
+    return _coarsen, _contract
+
+
 def make_refine_fn(k, kcap: int, rparams: RefineParams, rlog,
                    plan, race: bool, race_seed: int):
     """Per-level refinement dispatcher shared by `partition` and
@@ -73,14 +99,21 @@ def partition(hg: HostHypergraph, omega: int, delta: int,
               chain_rounds: int = 16,
               bucket: bool = False,
               plan=None, race: bool = True,
-              race_seed: int = 0) -> PartitionResult:
+              race_seed: int = 0,
+              dist_coarsen: bool = True) -> PartitionResult:
     """Full multi-level constrained partitioning (paper's SNN mode).
 
     bucket=True enables pow2 capacity re-bucketing between levels (perf
     iteration P1; see EXPERIMENTS.md §Perf) — identical results, coarse
     levels run on geometrically shrinking arrays.
 
-    plan (a `repro.dist.Plan`) routes every refinement level through
+    plan (a `repro.dist.Plan`) routes the whole V-cycle onto the mesh:
+    every coarsening level runs through `dist.partition.coarsen_level` /
+    `contract_level` (pins/pairs pipelines sharded across the model axis,
+    bit-exact with the single-device `use_kernels=False` path — on-mesh the
+    Pallas kernels are replaced by the striped pipeline, as in refinement;
+    `dist_coarsen=False` keeps coarsening single-device) and every
+    refinement level through
     `dist.partition.refine_level`: repetitions race as replicas across the
     mesh's data axis (`race=False` for the deterministic parity mode) and
     the pins-sized pipelines shard across its model axis. `race_seed`
@@ -97,12 +130,13 @@ def partition(hg: HostHypergraph, omega: int, delta: int,
     target = max(1, math.ceil(hg.n_nodes / omega))
     levels, gammas = [], []
     log: list = []
+    _coarsen, _contract = make_coarsen_fns(cparams, plan, dist_coarsen)
     t_coarsen = time.perf_counter()
     while int(d.n_nodes) > target and len(gammas) < max_levels:
-        match, n_pairs, _ = coarsen_step(d, caps, cparams)
+        match, n_pairs = _coarsen(d, caps)
         if int(n_pairs) == 0:
             break
-        d2, gamma = contract(d, match, caps)
+        d2, gamma = _contract(d, match, caps)
         if collect_log:
             log.append(dict(kind="coarsen", level=len(gammas),
                             nodes=int(d.n_nodes), pairs=int(n_pairs),

@@ -1,4 +1,5 @@
-"""Mesh-sharded refinement driver: replica racing + sharded pins pipelines.
+"""Mesh-sharded V-cycle drivers: sharded coarsening + raced/sharded
+refinement.
 
 The paper's 380x refinement speedup (Sec. VI) comes from two levels of
 parallelism that a single-device run serializes: the Theta independent
@@ -38,11 +39,52 @@ Paper Sec. VI kernel -> sharded counterpart:
       merge sort is an open ROADMAP item), stripe-local scans with
       cross-shard carries, psum'd violation deltas
 
+Coarsening (`coarsen_level` / `contract_level`, paper Sec. V-B..V-E) shards
+the same way over "model" and is deterministic, so it never races — on a
+mesh with a data axis the replica rows simply compute identical levels.
+Paper kernel -> sharded counterpart:
+
+  pair-expansion scoring Eq. 5 (V-B/C)  -> `coarsen.score_slots(ctx)`: lane
+      stripes + stripe-local segmented binary search
+  in-histogram inter counter (Fig. 3)   -> same stripes, psum'd dense
+      integer counts
+  top-Pi candidate selection (V-C)      -> `coarsen.propose(ctx)`: Pi-round
+      `segment_argmax` on slot-lane stripes, cross-shard lexicographic
+      (value, id) pmax, winner slot retired on its owning shard
+  matching DP wavefront Eq. 7-12 (V-D)  -> `matching.match_pseudoforest
+      (ctx)`: replicated state, child-lane stripes per iteration
+  contraction dedup + packing (V-E)     -> `contract.contract_impl(ctx)`:
+      striped key construction, gathered-key sorts, stripe-local rank scans
+      with cross-shard carries, psum'd disjoint scatters
+
+What travels how — the exactness contract. Float32 addition is not
+associative, so a psum of float partial sums lands within an ulp of — but
+not bit-identical to — the single-device accumulation (measured: tens of
+mismatched slots per level at 8 shards), which is enough to flip an argmax
+and diverge the whole V-cycle. Every sharded reduction therefore picks one
+of three combines:
+
+  * psum     — integer counts only (inter, matching cnt ticks, contraction
+               counts and disjoint pin scatters): exact in any order.
+  * pmax     — (value, id) lexicographic claims (candidate rounds, matching
+               best-child): pure maxes, exact in any order.
+  * gather   — float sums (eta histograms, matching sum0 pushes) gather
+               their lane columns in stripe order, i.e. the global lane
+               order, and reduce replicated: the scatter-add order is then
+               bit-identical to the single-device sweep. Sort key columns
+               gather the same way (distributed sort: open ROADMAP item).
+
+Contraction is bit-exact by construction — its whole pipeline is integer —
+so the contracted hypergraph, not just the final parts vector, matches the
+single-device level byte-for-byte; refinement then starts each level from
+identical state.
+
 Exactness: with racing off (or on the 1-replica data axis) every replica
-uses the identity permutation and the sharded pipelines psum integer /
-integer-valued partial sums, so the result is bit-identical to the
-single-device `core.partitioner.partition` — enforced by the parity tests
-in tests/test_dist_partition.py under 8 forced host devices.
+uses the identity permutation, and with the combine discipline above every
+sharded stage of both coarsening and refinement reproduces the
+single-device arithmetic exactly, so the full V-cycle is bit-identical to
+`core.partitioner.partition` — enforced by the parity tests in
+tests/test_dist_partition.py under 8 forced host devices.
 """
 from __future__ import annotations
 
@@ -53,6 +95,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.coarsen import CoarsenParams, coarsen_step_impl
+from repro.core.contract import contract_impl
 from repro.core.hypergraph import Caps
 from repro.core.refine import RefineParams, refine_step_impl
 from repro.dist.sharding import Plan
@@ -147,12 +191,70 @@ def refine_level(d, parts, n_parts, caps: Caps, kcap: int,
     return parts
 
 
+@functools.lru_cache(maxsize=None)
+def _build_coarsen_step(mesh, model_axis: str | None, nshards: int,
+                        caps: Caps, cparams: CoarsenParams):
+    """One sharded coarsening level (proposal + matching), jitted; cached
+    per static signature like `_build_step`."""
+    ctx = segops.ShardCtx(axis=model_axis, nshards=nshards)
+
+    def body(d):
+        match, n_pairs, _ = coarsen_step_impl(d, caps, cparams, ctx)
+        return match, n_pairs
+
+    fn = common.shard_map(body, mesh=mesh, in_specs=(P(),),
+                          out_specs=(P(), P()))
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _build_contract(mesh, model_axis: str | None, nshards: int, caps: Caps):
+    ctx = segops.ShardCtx(axis=model_axis, nshards=nshards)
+
+    def body(d, match):
+        return contract_impl(d, match, caps, ctx)
+
+    fn = common.shard_map(body, mesh=mesh, in_specs=(P(), P()),
+                          out_specs=(P(), P()))
+    return jax.jit(fn)
+
+
+def coarsen_level(d, caps: Caps, cparams: CoarsenParams, plan: Plan):
+    """Drop-in for `core.coarsen.coarsen_step` on a mesh (without the
+    proposals debug output): one coarsening level with the pairs/slot
+    pipelines sharded over the plan's model axis. Deterministic — never
+    raced — and bit-exact with the single-device step (see the module
+    docstring for the psum / pmax / gather combine discipline).
+    Returns (match[Ncap], n_matched_pairs).
+
+    Caveat (same as `refine_level`): with `use_kernels=True` the Pallas
+    kernel path is replaced by the striped segment pipeline, whose eta sums
+    in a different fp order than the kernel — so bit-exact parity with the
+    single-device run is only guaranteed against its `use_kernels=False`
+    path."""
+    if cparams.use_kernels:
+        # Pallas kernels assume whole-array lanes; the sharded pipeline
+        # replaces them (same segment reductions, striped)
+        cparams = dataclasses.replace(cparams, use_kernels=False)
+    _, model_axis, nshards = plan_axes(plan)
+    step = _build_coarsen_step(plan.mesh, model_axis, nshards, caps, cparams)
+    return step(d)
+
+
+def contract_level(d, match, caps: Caps, plan: Plan):
+    """Drop-in for `core.contract.contract` on a mesh: integer-only
+    pipeline, bit-exact sharded contraction. Returns (d_coarse, gamma)."""
+    _, model_axis, nshards = plan_axes(plan)
+    fn = _build_contract(plan.mesh, model_axis, nshards, caps)
+    return fn(d, match)
+
+
 def partition(hg, omega: int, delta: int, plan: Plan, *, race: bool = True,
               seed: int = 0, **kw):
-    """Multi-level constrained partitioning with mesh-sharded refinement:
-    `core.partitioner.partition` with every refinement level raced and
-    sharded over `plan`. Coarsening stays single-device (it is a small
-    fraction of the runtime; see ROADMAP)."""
+    """Multi-level constrained partitioning with the whole V-cycle on the
+    mesh: `core.partitioner.partition` with every coarsening level sharded
+    (`coarsen_level`/`contract_level`) and every refinement level raced and
+    sharded over `plan`."""
     from repro.core.partitioner import partition as _partition
     return _partition(hg, omega, delta, plan=plan, race=race,
                       race_seed=seed, **kw)

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.hypergraph import (Caps, DeviceHypergraph, Neighborhoods,
                                    PairExpansion, NSENT)
@@ -19,8 +20,12 @@ from repro.utils import segops
 from repro.kernels.pair_scores.kernel import pair_scores_pallas
 
 INTERPRET = jax.default_backend() != "tpu"
-NBR_PAD = jnp.int32(-1)
-TRAV_PAD = jnp.int32(-2)
+# plain numpy scalars: this module is lazily imported inside jitted callers
+# (`coarsen.propose`'s use_kernels branch), and a module-level jnp constant
+# created during that trace would be a leaked tracer for every later
+# eager caller (UnexpectedTracerError)
+NBR_PAD = np.int32(-1)
+TRAV_PAD = np.int32(-2)
 
 
 def _round_up(x: int, m: int) -> int:

@@ -6,10 +6,12 @@
 
 --mesh none runs the classic single-device `core.partitioner.partition`;
 --mesh host builds a (replicas, n_local_devices // replicas) Plan over the
-locally visible devices and routes refinement through
-`dist.partition.refine_level` (replica racing over "data", sharded pins
-pipelines over "model"). Force a multi-device CPU run with
-XLA_FLAGS=--xla_force_host_platform_device_count=8.
+locally visible devices and routes the whole V-cycle on-mesh: coarsening
+through `dist.partition.coarsen_level`/`contract_level` (sharded pairs/pins
+pipelines over "model"; `--single-coarsen` keeps coarsening on one device)
+and refinement through `dist.partition.refine_level` (replica racing over
+"data", sharded pins pipelines over "model"). Force a multi-device CPU run
+with XLA_FLAGS=--xla_force_host_platform_device_count=8.
 """
 from __future__ import annotations
 
@@ -43,6 +45,9 @@ def main(argv=None):
     ap.add_argument("--no-race", action="store_true",
                     help="identity tie-breaks on every replica "
                          "(deterministic parity mode)")
+    ap.add_argument("--single-coarsen", action="store_true",
+                    help="keep coarsening single-device (refinement still "
+                         "runs on the mesh)")
     ap.add_argument("--race-seed", type=int, default=0)
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
@@ -63,7 +68,8 @@ def main(argv=None):
     plan = build_plan(args.replicas) if args.mesh == "host" else None
     res = partition(hg, omega=args.omega, delta=args.delta, theta=args.theta,
                     plan=plan, race=not args.no_race,
-                    race_seed=args.race_seed)
+                    race_seed=args.race_seed,
+                    dist_coarsen=not args.single_coarsen)
     out = dict(
         connectivity=res.connectivity, cut_net=res.cut_net,
         n_parts=res.n_parts, n_levels=res.n_levels,
@@ -72,6 +78,7 @@ def main(argv=None):
         timings=res.timings,
         mesh=(dict(plan.mesh.shape) if plan is not None else None),
         race=(not args.no_race) if plan is not None else None,
+        dist_coarsen=(not args.single_coarsen) if plan is not None else None,
     )
     print(json.dumps(out, indent=2))
     if args.json:

@@ -53,10 +53,38 @@ class ShardCtx:
 
     def psum(self, x: jax.Array) -> jax.Array:
         """Combine per-shard partial dense reductions (the all-gather-free
-        segment reduction: dense outputs travel, never the lanes)."""
+        segment reduction: dense outputs travel, never the lanes).
+
+        Exact for integer / integer-valued partials only: float32 addition
+        is not associative, so float partial sums combined by psum can drift
+        from the single-device accumulation order by an ulp (enough to flip
+        a downstream argmax). Bit-exact float reductions must instead gather
+        their lane columns in stripe order (= global lane order) and reduce
+        replicated — see `core.coarsen.score_slots` / `core.matching`."""
         if self.axis is None:
             return x
         return jax.lax.psum(x, self.axis)
+
+    def pmax(self, x: jax.Array) -> jax.Array:
+        """Cross-shard elementwise max of per-shard dense reductions. Unlike
+        a float psum this is exact in any combine order (max is associative
+        and commutative over totally ordered floats)."""
+        if self.axis is None:
+            return x
+        return jax.lax.pmax(x, self.axis)
+
+    def pmax_pair(self, values: jax.Array, ids: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+        """Cross-shard lexicographic (value, id) max, larger id breaking
+        ties — the distributed form of ``segment_argmax``'s deterministic
+        claim resolution. ``values``/``ids`` are per-shard dense winners
+        (e.g. one per segment); empty shards contribute ``(-inf, -1)``.
+        Exact: both passes are pure maxes, no float addition involved."""
+        if self.axis is None:
+            return values, ids
+        v = jax.lax.pmax(values, self.axis)
+        i = jax.lax.pmax(jnp.where(values == v, ids, -1), self.axis)
+        return v, i
 
     def lanes(self, total: int) -> tuple[jax.Array, jax.Array]:
         """(global lane ids, in-range mask) for this shard's contiguous
@@ -65,6 +93,14 @@ class ShardCtx:
         per = -(-total // max(self.nshards, 1))
         t = self.index() * per + jnp.arange(per, dtype=jnp.int32)
         return t, t < total
+
+    def take(self, x: jax.Array, lanes: jax.Array, ok: jax.Array,
+             fill) -> jax.Array:
+        """``x[lanes]`` with padding / out-of-range lanes masked to
+        ``fill`` — the standard stripe-local gather from a replicated array
+        for ``lanes, ok = self.lanes(total)`` (clip keeps the tail shard's
+        padding lanes in-bounds)."""
+        return jnp.where(ok, x[jnp.clip(lanes, 0, x.shape[0] - 1)], fill)
 
     def rows(self, offsets: jax.Array, t: jax.Array, total: int,
              num_rows: int) -> jax.Array:

@@ -2,6 +2,7 @@
 hypergraph structural invariants (paper Secs. V-B/C/E)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import generate, metrics
 from repro.core import hypergraph as H
@@ -87,6 +88,16 @@ def test_contract_structural_invariants():
         src2 = set(h2.src(e).tolist())
         dst2 = set(h2.dst(e).tolist())
         assert not (src2 & dst2)
+
+
+def test_coarsen_params_rejects_unknown_matching():
+    """An unknown matching mode used to silently fall through to the exact
+    DP (the `else` branch in `run_matching_rounds`); it must raise."""
+    with pytest.raises(ValueError, match="matching"):
+        CoarsenParams(omega=8, delta=16, matching="bogus")
+    # the two documented modes still construct
+    CoarsenParams(omega=8, delta=16, matching="exact")
+    CoarsenParams(omega=8, delta=16, matching="greedy")
 
 
 def test_propose_respects_validity_mask():

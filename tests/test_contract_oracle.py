@@ -1,0 +1,234 @@
+"""Numpy brute-force oracle for `core.contract.contract` (paper Sec. V-E).
+
+The oracle rebuilds the coarse hypergraph with nested loops and python
+sets — pin dedup per edge, dst-kept-over-src role merge, src-first pin
+layout with coarse ids ascending within each role, inbound-first incidence
+ordered by edge id within each group, node-size and edge-weight
+conservation — and every device-array field is compared exactly.
+
+Mutation verification: the two seeded defects the oracle must catch are
+demonstrated caught at the bottom of this file — a flipped `_role_key`
+(src kept over dst on duplicate pins) and a dropped `starts` dedup mask
+(duplicate coarse pins survive). Both run the *unjitted* `contract_impl`
+under monkeypatch so the mutation is actually traced.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import generate
+from repro.core import contract as C
+from repro.core import hypergraph as H
+from repro.core.coarsen import CoarsenParams, coarsen_step
+from repro.utils import segops
+
+
+def random_matching(n_nodes, rng, frac=0.7):
+    """Random involution without fixed points over a subset of nodes."""
+    match = np.full(n_nodes, -1, np.int64)
+    perm = rng.permutation(n_nodes)
+    for i in range(0, n_nodes - 1, 2):
+        a, b = perm[i], perm[i + 1]
+        if rng.random() < frac:
+            match[a], match[b] = b, a
+    return match
+
+
+def contract_oracle(hg, node_size, match):
+    """Nested-loop + python-set rebuild of the coarse hypergraph."""
+    n = hg.n_nodes
+    # clusters: representative = min(i, match[i]); coarse ids in rep order
+    rep = [min(i, match[i]) if match[i] >= 0 else i for i in range(n)]
+    reps = sorted({rep[i] for i in range(n)})
+    newid = {r: k for k, r in enumerate(reps)}
+    gamma = np.array([newid[rep[i]] for i in range(n)], np.int64)
+    n_new = len(reps)
+
+    size_new = np.zeros(n_new, np.int64)
+    for i in range(n):
+        size_new[gamma[i]] += node_size[i]
+
+    # coarse edges: gamma images, set-dedup, dst role wins, src-first pins
+    pins, nsrc, off = [], [], [0]
+    for e in range(hg.n_edges):
+        src = {int(gamma[p]) for p in hg.src(e)}
+        dst = {int(gamma[p]) for p in hg.dst(e)}
+        src -= dst  # a pin in both roles keeps only dst (paper V-E)
+        pins.extend(sorted(src))
+        pins.extend(sorted(dst))
+        nsrc.append(len(src))
+        off.append(len(pins))
+    n_pins = len(pins)
+
+    # incidence: inbound h-edges first per node, edge-id ascending per group
+    inb = [[] for _ in range(n_new)]
+    outb = [[] for _ in range(n_new)]
+    for e in range(hg.n_edges):
+        s, d0 = off[e] + nsrc[e], off[e + 1]
+        for p in pins[off[e]: off[e] + nsrc[e]]:
+            outb[p].append(e)
+        for p in pins[s:d0]:
+            inb[p].append(e)
+    node_edges, node_is_in, node_off, node_nin = [], [], [0], []
+    for v in range(n_new):
+        node_edges.extend(inb[v])
+        node_is_in.extend([True] * len(inb[v]))
+        node_edges.extend(outb[v])
+        node_is_in.extend([False] * len(outb[v]))
+        node_off.append(len(node_edges))
+        node_nin.append(len(inb[v]))
+    return dict(gamma=gamma, n_nodes=n_new, n_edges=hg.n_edges,
+                n_pins=n_pins, edge_off=np.asarray(off),
+                edge_pins=np.asarray(pins, np.int64),
+                edge_nsrc=np.asarray(nsrc), edge_w=hg.edge_w,
+                node_off=np.asarray(node_off),
+                node_edges=np.asarray(node_edges, np.int64),
+                node_is_in=np.asarray(node_is_in, bool),
+                node_nin=np.asarray(node_nin),
+                node_size=size_new)
+
+
+def assert_matches_oracle(hg, d2, gamma, orc):
+    """Field-by-field comparison of the device contraction vs the oracle."""
+    nn, ne, npn = orc["n_nodes"], orc["n_edges"], orc["n_pins"]
+    assert int(d2.n_nodes) == nn
+    assert int(d2.n_edges) == ne
+    assert int(d2.n_pins) == npn
+    np.testing.assert_array_equal(np.asarray(gamma)[: hg.n_nodes],
+                                  orc["gamma"])
+    np.testing.assert_array_equal(np.asarray(d2.edge_off)[: ne + 1],
+                                  orc["edge_off"])
+    np.testing.assert_array_equal(np.asarray(d2.edge_pins)[:npn],
+                                  orc["edge_pins"])
+    np.testing.assert_array_equal(np.asarray(d2.edge_nsrc)[:ne],
+                                  orc["edge_nsrc"])
+    np.testing.assert_array_equal(np.asarray(d2.edge_w)[:ne], orc["edge_w"])
+    np.testing.assert_array_equal(np.asarray(d2.node_off)[: nn + 1],
+                                  orc["node_off"])
+    np.testing.assert_array_equal(np.asarray(d2.node_edges)[:npn],
+                                  orc["node_edges"])
+    np.testing.assert_array_equal(np.asarray(d2.node_is_in)[:npn],
+                                  orc["node_is_in"])
+    np.testing.assert_array_equal(np.asarray(d2.node_nin)[:nn],
+                                  orc["node_nin"])
+    np.testing.assert_array_equal(np.asarray(d2.node_size)[:nn],
+                                  orc["node_size"])
+
+
+def _pad_match(match, caps):
+    return jnp.asarray(np.pad(match, (0, caps.n - len(match)),
+                              constant_values=-1).astype(np.int32))
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_contract_matches_oracle_random_matchings(seed):
+    rng = np.random.default_rng(seed)
+    hg = generate.random_kuniform(n_nodes=24, n_edges=30, k=4, seed=seed,
+                                  n_src=2, weighted=True)
+    caps = H.Caps.for_host(hg)
+    d = H.device_from_host(hg, caps)
+    match = random_matching(hg.n_nodes, rng)
+    d2, gamma = C.contract(d, _pad_match(match, caps), caps)
+    orc = contract_oracle(hg, np.ones(hg.n_nodes, np.int64), match)
+    assert_matches_oracle(hg, d2, gamma, orc)
+
+
+@pytest.mark.parametrize("gen,seed", [("smallworld", 3), ("ispd", 11)])
+def test_contract_matches_oracle_coarsen_matchings(gen, seed):
+    """Same comparison on pipeline-produced matchings, two levels deep
+    (level 2 exercises non-unit node sizes)."""
+    if gen == "smallworld":
+        hg = generate.snn_smallworld(n_nodes=60, fanout=5, seed=seed)
+    else:
+        hg = generate.ispd_like(n_nodes=80, seed=seed)
+    caps = H.Caps.for_host(hg)
+    d = H.device_from_host(hg, caps)
+    params = CoarsenParams(omega=10, delta=2**20)
+    for _ in range(2):
+        match, n_pairs, _ = coarsen_step(d, caps, params)
+        if int(n_pairs) == 0:
+            break
+        d2, gamma = C.contract(d, match, caps)
+        host = H.host_from_device(d)
+        sizes = np.asarray(d.node_size)[: host.n_nodes].astype(np.int64)
+        orc = contract_oracle(host, sizes,
+                              np.asarray(match)[: host.n_nodes])
+        assert_matches_oracle(host, d2, gamma, orc)
+        d = d2
+
+
+# ---------------------------------------------------------------------------
+# mutation verification: the oracle must catch the two seeded defects
+# ---------------------------------------------------------------------------
+def _both_roles_graph():
+    """Edge 0 = src {0} + dst {1, 2}; matching 0-1 merges a src pin with a
+    dst pin of the same edge, so the merged coarse pin holds both roles and
+    the dst-over-src merge rule decides the result."""
+    hg = H.HostHypergraph(n_nodes=4,
+                          edge_off=np.array([0, 3, 5]),
+                          edge_pins=np.array([0, 1, 2, 1, 3]),
+                          edge_nsrc=np.array([1, 1]),
+                          edge_w=np.array([1.0, 2.0]))
+    match = np.array([1, 0, -1, -1], np.int64)
+    return hg, match
+
+
+def test_contract_oracle_catches_flipped_role_key(monkeypatch):
+    hg, match = _both_roles_graph()
+    caps = H.Caps.for_host(hg)
+    d = H.device_from_host(hg, caps)
+    orc = contract_oracle(hg, np.ones(hg.n_nodes, np.int64), match)
+
+    # sanity: the unmutated contraction passes, and the defect site is live
+    d2, gamma = C.contract_impl(d, _pad_match(match, caps), caps)
+    assert_matches_oracle(hg, d2, gamma, orc)
+    assert orc["edge_nsrc"][0] == 0  # merged pin kept its dst role
+
+    monkeypatch.setattr(C, "_role_key",
+                        lambda is_dst: jnp.where(is_dst, 1, 0))
+    d2m, gammam = C.contract_impl(d, _pad_match(match, caps), caps)
+    with pytest.raises(AssertionError):
+        assert_matches_oracle(hg, d2m, gammam, orc)
+    # the specific symptom: the merged pin was kept as src
+    assert int(np.asarray(d2m.edge_nsrc)[0]) == 1
+
+
+def test_contract_oracle_catches_dropped_dedup_mask(monkeypatch):
+    hg, match = _both_roles_graph()
+    caps = H.Caps.for_host(hg)
+    d = H.device_from_host(hg, caps)
+    orc = contract_oracle(hg, np.ones(hg.n_nodes, np.int64), match)
+
+    orig = segops.segment_starts_from_sorted
+
+    def no_dedup(keys):
+        # drop the (edge, coarse-pin) duplicate mask; leave the single-key
+        # edge-boundary call (rank-scan segments) intact
+        s = orig(keys)
+        return jnp.ones_like(s) if len(keys) == 2 else s
+
+    monkeypatch.setattr(segops, "segment_starts_from_sorted", no_dedup)
+    d2m, gammam = C.contract_impl(d, _pad_match(match, caps), caps)
+    with pytest.raises(AssertionError):
+        assert_matches_oracle(hg, d2m, gammam, orc)
+    # the specific symptom: the duplicate coarse pin survived
+    assert int(d2m.n_pins) == orc["n_pins"] + 1
+
+
+def test_contract_oracle_is_selfconsistent_with_validate():
+    """The oracle's coarse graph is itself a valid hypergraph (unique pins,
+    src/dst disjoint) — guards the oracle against its own bugs."""
+    rng = np.random.default_rng(0)
+    hg = generate.random_kuniform(n_nodes=20, n_edges=25, k=4, seed=0,
+                                  n_src=2)
+    match = random_matching(hg.n_nodes, rng)
+    orc = contract_oracle(hg, np.ones(hg.n_nodes, np.int64), match)
+    h2 = H.HostHypergraph(n_nodes=orc["n_nodes"], edge_off=orc["edge_off"],
+                          edge_pins=orc["edge_pins"],
+                          edge_nsrc=orc["edge_nsrc"], edge_w=orc["edge_w"])
+    h2.validate()
+    no, ne2, nii, nin = h2.incidence()
+    np.testing.assert_array_equal(no, orc["node_off"])
+    np.testing.assert_array_equal(ne2, orc["node_edges"])
+    np.testing.assert_array_equal(nii, orc["node_is_in"])
+    np.testing.assert_array_equal(nin, orc["node_nin"])

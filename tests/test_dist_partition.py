@@ -1,13 +1,16 @@
-"""Mesh-sharded refinement (`dist.partition`) vs the single-device
+"""Mesh-sharded V-cycle (`dist.partition`) vs the single-device
 partitioner.
 
 Parity contract: with racing off every replica runs the identity tie-break
-permutation and the sharded pipelines psum integer-valued partial sums, so
-`dist.partition` must reproduce the single-device `partition` *bit-for-bit*
-(same parts array, same audit). The 8-forced-host-device variants run in a
-subprocess so the main test session keeps its single-device view; CI's slow
-job additionally runs this file with XLA_FLAGS already forcing 8 devices
-(see .github/workflows/ci.yml), which the in-process test picks up."""
+permutation, and every sharded reduction is either an integer psum, a
+lexicographic (value, id) pmax, or a stripe-ordered gather + replicated
+float reduction (see dist/partition.py), so the *full* distributed V-cycle
+— sharded coarsening + contraction + sharded refinement — must reproduce
+the single-device `partition` *bit-for-bit* (same parts array, same audit,
+same level count). The 8-forced-host-device variants run in a subprocess so
+the main test session keeps its single-device view; CI's slow job
+additionally runs this file with XLA_FLAGS already forcing 8 devices (see
+.github/workflows/ci.yml), which the in-process tests pick up."""
 import os
 import subprocess
 import sys
@@ -50,11 +53,46 @@ def test_dist_partition_parity_single_device():
     r0, r1, r2 = _parity_check()
     assert np.array_equal(r0.parts, r1.parts)
     assert r0.audit["connectivity"] == r1.audit["connectivity"]
+    assert r0.n_levels == r1.n_levels  # coarsening rode the mesh too
     if len(jax.devices()) == 1:
         # one replica -> replica 0 -> identity permutation even when racing
         assert np.array_equal(r0.parts, r2.parts)
     else:
         assert r2.audit["size_ok"] and r2.audit["inbound_ok"]
+
+
+def test_coarsen_contract_level_parity():
+    """`dist.partition.coarsen_level`/`contract_level` vs the single-device
+    `coarsen_step`/`contract`, bit-exact field by field — on however many
+    devices this session sees (8 in CI's forced-fan-out step)."""
+    import dataclasses
+
+    import jax
+    from repro.core import generate
+    from repro.core import hypergraph as H
+    from repro.core.coarsen import CoarsenParams, coarsen_step
+    from repro.core.contract import contract
+    from repro.dist.sharding import Plan
+    import repro.dist.partition as dp
+
+    n = len(jax.devices())
+    plan = Plan.make(jax.make_mesh((1, n), ("data", "model")))
+    hg = generate.snn_layered(**_GRAPH)
+    caps = H.Caps.for_host(hg)
+    d = H.device_from_host(hg, caps)
+    cp = CoarsenParams(omega=_CONSTRAINTS["omega"],
+                       delta=_CONSTRAINTS["delta"])
+    m0, np0, _ = coarsen_step(d, caps, cp)
+    m1, np1 = dp.coarsen_level(d, caps, cp, plan)
+    assert np.array_equal(np.asarray(m0), np.asarray(m1))
+    assert int(np0) == int(np1)
+    d20, g0 = contract(d, m0, caps)
+    d21, g1 = dp.contract_level(d, m1, caps, plan)
+    assert np.array_equal(np.asarray(g0), np.asarray(g1))
+    for f in dataclasses.fields(d20):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(d20, f.name)),
+            np.asarray(getattr(d21, f.name)), err_msg=f.name)
 
 
 @pytest.mark.slow
@@ -101,7 +139,8 @@ _MULTIDEV = textwrap.dedent("""
     exp = np.asarray(segops.segmented_scan(vals, starts))
     assert np.array_equal(got, exp), (got, exp)
 
-    # --- parity: 2 racing replicas x 4 pipeline shards, race off ---------
+    # --- full V-cycle parity (sharded coarsen + contract + refine): ------
+    # 2 racing replicas x 4 pipeline shards and 1 x 8, race off
     hg = generate.snn_layered(n_layers=4, width=24, fanout=6, window=8,
                               seed=3)
     r0 = partition(hg, omega=16, delta=64, theta=4)
@@ -112,6 +151,7 @@ _MULTIDEV = textwrap.dedent("""
                        race=False)
         assert np.array_equal(r0.parts, r1.parts), shape
         assert r0.audit == r1.audit, shape
+        assert r0.n_levels == r1.n_levels, shape  # coarsening on-mesh too
 
     # --- shard-only mesh (no data axis): racing must be skipped, not run
     # over the pipeline-shard axis (replicas diverging along "model" would

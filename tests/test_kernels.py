@@ -61,3 +61,68 @@ def test_kernel_routed_partitioner_matches_pure_jax():
     r1 = partition(hg, omega=12, delta=40, theta=2, use_kernels=True)
     np.testing.assert_array_equal(r0.parts, r1.parts)
     assert r0.audit["size_ok"] and r0.audit["inbound_ok"]
+
+
+def _cond_score_slots(d, nbrs, pairs, caps):
+    """The exact `use_kernels=True` dispatch from `coarsen.propose`."""
+    import jax
+    from repro.core.coarsen import score_slots
+    from repro.kernels.pair_scores import ops as ps_ops
+    return jax.lax.cond(
+        ps_ops.fits_kernel(d, nbrs, pairs, caps),
+        lambda: ps_ops.score_slots_kernel(d, nbrs, pairs, caps),
+        lambda: score_slots(d, nbrs, pairs, caps))
+
+
+def test_pair_scores_cond_inside_tile_bounds(rng):
+    """Graph within the level-0 tile bounds: the kernel branch is taken and
+    must agree with `score_slots` (eta to fp tolerance — the kernel sums in
+    a different order — inter exactly)."""
+    from repro.core import generate
+    from repro.core import hypergraph as H
+    from repro.core.coarsen import score_slots
+    from repro.kernels.pair_scores import ops as ps_ops
+
+    hg = generate.random_kuniform(36, 50, 5, seed=4, n_src=2, weighted=True)
+    caps = H.Caps.for_host(hg)
+    d = H.device_from_host(hg, caps)
+    pairs = H.build_pairs(d, caps)
+    nbrs = H.build_neighbors(pairs, d, caps)
+    assert bool(ps_ops.fits_kernel(d, nbrs, pairs, caps))
+    eta_c, inter_c = _cond_score_slots(d, nbrs, pairs, caps)
+    eta_k, inter_k = ps_ops.score_slots_kernel(d, nbrs, pairs, caps)
+    eta_s, inter_s = score_slots(d, nbrs, pairs, caps)
+    # cond took the kernel branch bit-for-bit
+    np.testing.assert_array_equal(np.asarray(eta_c), np.asarray(eta_k))
+    np.testing.assert_array_equal(np.asarray(inter_c), np.asarray(inter_k))
+    np.testing.assert_allclose(np.asarray(eta_c), np.asarray(eta_s),
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(inter_c), np.asarray(inter_s))
+
+
+def test_pair_scores_cond_outside_tile_bounds_falls_back():
+    """Graph whose per-node traversal/neighborhood exceed the (shrunken)
+    level-0 tile bounds: `fits_kernel` must reject and the `lax.cond`
+    fallback branch must produce bit-identical (eta, inter) to
+    `score_slots` — the guard the coarse levels rely on when merged
+    neighborhoods outgrow the level-0 caps."""
+    import dataclasses
+    from repro.core import generate
+    from repro.core import hypergraph as H
+    from repro.core.coarsen import score_slots
+    from repro.kernels.pair_scores import ops as ps_ops
+
+    # one 140-pin edge: every pin sees 139 unique neighbors > the 128-wide
+    # tile that caps with u0 = l0 = 1 round up to
+    hg = generate.random_kuniform(200, 3, 140, seed=1, n_src=2,
+                                  weighted=True)
+    caps0 = H.Caps.for_host(hg)
+    caps = dataclasses.replace(caps0, u0=1, l0=1)
+    d = H.device_from_host(hg, caps)
+    pairs = H.build_pairs(d, caps)
+    nbrs = H.build_neighbors(pairs, d, caps)
+    assert not bool(ps_ops.fits_kernel(d, nbrs, pairs, caps))
+    eta_c, inter_c = _cond_score_slots(d, nbrs, pairs, caps)
+    eta_s, inter_s = score_slots(d, nbrs, pairs, caps)
+    np.testing.assert_array_equal(np.asarray(eta_c), np.asarray(eta_s))
+    np.testing.assert_array_equal(np.asarray(inter_c), np.asarray(inter_s))

@@ -97,3 +97,58 @@ def test_matching_deterministic(rng):
     m1 = np.asarray(match_pseudoforest(*args))
     m2 = np.asarray(match_pseudoforest(*args))
     np.testing.assert_array_equal(m1, m2)
+
+
+# ---------------------------------------------------------------------------
+# mutation verification for the matching properties (hypothesis variants in
+# tests/test_property.py): each seeded defect violates a property the real
+# DP satisfies, demonstrating the properties discriminate.
+# ---------------------------------------------------------------------------
+def _greedy_mutual_only(target, score, live):
+    """The seeded defect: `run_matching_rounds`' greedy ablation branch
+    (mutual targets pair, everything else stays unmatched) in place of the
+    exact DP."""
+    n = len(target)
+    m = np.full(n, -1, np.int64)
+    for a in range(n):
+        b = target[a]
+        if live[a] and b >= 0 and live[b] and target[b] == a:
+            m[a] = b
+    return m
+
+
+def test_optimality_property_catches_greedy_mutation():
+    """Path proposal graph a-b-c-d with eta(a,b)=5, eta(b,c)=6, eta(c,d)=5:
+    only b-c is mutual, so the greedy defect scores 6 while the optimum
+    (and the DP) pairs a-b + c-d for 10. The brute-force-total property
+    fails on the mutant and holds on the real DP."""
+    target = np.array([1, 2, 1, 2], np.int32)
+    score = np.array([5.0, 6.0, 6.0, 5.0], np.float32)
+    live = np.ones(4, bool)
+    best = brute_force(target, score)
+    assert best == 10.0
+
+    m_mut = _greedy_mutual_only(target, score, live)
+    assert matched_value(target, score, m_mut) == 6.0  # defect caught
+    assert abs(matched_value(target, score, m_mut) - best) > 1e-6
+
+    m = np.asarray(match_pseudoforest(
+        jnp.asarray(target), jnp.asarray(score), jnp.asarray(live)))
+    assert abs(matched_value(target, score, m) - best) < 1e-6
+
+
+def test_liveness_property_catches_ignored_live_mask():
+    """The seeded defect of ignoring `live` pairs a dead node; the
+    never-pairs-dead property fails on the mutant and holds on the DP."""
+    target = np.array([1, 0], np.int32)
+    score = np.array([3.0, 3.0], np.float32)
+    live = np.array([True, False])
+
+    m_mut = np.asarray(match_pseudoforest(
+        jnp.asarray(target), jnp.asarray(score),
+        jnp.ones(2, bool)))  # defect: live mask dropped
+    assert m_mut[1] == 0 and not live[1]  # pairs a dead node -> caught
+
+    m = np.asarray(match_pseudoforest(
+        jnp.asarray(target), jnp.asarray(score), jnp.asarray(live)))
+    assert (m == -1).all()

@@ -15,7 +15,10 @@ from repro.core import hypergraph as H
 from repro.core import refine as R
 from repro.core.coarsen import CoarsenParams, coarsen_step
 from repro.core.contract import contract
+from repro.core.matching import match_pseudoforest
 from repro.utils import segops
+
+from test_matching import brute_force, matched_value, proposal_graph
 
 SET = settings(max_examples=12, deadline=None,
                suppress_health_check=[HealthCheck.too_slow])
@@ -139,6 +142,47 @@ def test_build_sequence_properties(n, e, k, kparts, seed, rank_seed):
     for x in range(hg.n_nodes):
         if mv[x] >= 0 and pred[x] >= 0:
             assert sq[pred[x]] == sq[x] - 1
+
+
+@given(n=st.integers(3, 9), seed=st.integers(0, 10_000))
+@SET
+def test_matching_total_equals_bruteforce_dp(n, seed):
+    """On invariant-respecting round-1 proposal graphs (symmetric eta,
+    larger-id tie-break), `match_pseudoforest`'s matched total equals the
+    exact max-weight matching (brute-force over edge subsets), and the
+    matching only uses proposed edges mutually."""
+    rng = np.random.default_rng(seed)
+    target, score = proposal_graph(rng, n)
+    m = np.asarray(match_pseudoforest(
+        jnp.asarray(target), jnp.asarray(score), jnp.ones(n, bool)))
+    for a in range(n):
+        if m[a] >= 0:
+            assert m[m[a]] == a and m[a] != a
+            assert target[a] == m[a] or target[m[a]] == a
+    assert abs(matched_value(target, score, m)
+               - brute_force(target, score)) < 1e-5
+
+
+@given(n=st.integers(2, 40), seed=st.integers(0, 10_000),
+       p_dead=st.floats(0.0, 0.6))
+@SET
+def test_matching_mutual_and_live_on_functional_graphs(n, seed, p_dead):
+    """On arbitrary functional graphs (broken invariants, long cycles) the
+    output is always a mutual involution and never pairs dead
+    (`live=False`) nodes."""
+    rng = np.random.default_rng(seed)
+    target = rng.integers(-1, n, size=n).astype(np.int32)
+    target[target == np.arange(n)] = -1
+    score = (rng.random(n) * 10).astype(np.float32)
+    live = rng.random(n) >= p_dead
+    m = np.asarray(match_pseudoforest(
+        jnp.asarray(target), jnp.asarray(score), jnp.asarray(live)))
+    for a in range(n):
+        if m[a] >= 0:
+            assert m[m[a]] == a and m[a] != a
+            assert live[a] and live[m[a]]
+            assert target[a] == m[a] or target[m[a]] == a
+    assert (m[~live] == -1).all()
 
 
 @given(seed=st.integers(0, 50), k=st.integers(2, 5))
