@@ -5,8 +5,11 @@ Each device count runs in a fresh subprocess (XLA device topology is fixed
 at backend init), partitions the same SNN hypergraph through
 `dist.partition` with a (1, n)-mesh Plan — all devices shard the pins/pairs
 pipelines of both coarsening and refinement — and reports the second run's
-per-phase wall-times (first run pays compile): a coarsen-phase column and a
-refine-phase column per device count. On this CPU container the "devices"
+per-phase wall-times (first run pays compile): a coarsen-phase column, a
+refine-phase column, and a `sort_s` column (an events-scale distributed
+sample sort in isolation, with the bytes/shard the legacy gathered sort
+would have moved vs the splitter sample that travels now) per device
+count. On this CPU container the "devices"
 are host threads, so the numbers chart overhead/scaling shape rather than
 real speedup; on an accelerator mesh the same harness measures the real
 thing.
@@ -25,13 +28,18 @@ import textwrap
 DEVICE_COUNTS = (1, 2, 4, 8)
 
 _CHILD = textwrap.dedent("""
-    import os, sys, json
+    import os, sys, json, time
     os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
                                + sys.argv[1])
-    import jax
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
     from repro.core import generate
+    from repro.core.hypergraph import Caps
     from repro.core.partitioner import partition
     from repro.dist.sharding import Plan
+    from repro.models import common
+    from repro.utils import segops
 
     n_dev = int(sys.argv[1])
     mesh = jax.make_mesh((1, n_dev), ("data", "model"))
@@ -42,9 +50,40 @@ _CHILD = textwrap.dedent("""
     for _ in range(2):   # second run: jit cache warm per caps signature
         res = partition(hg, omega=24, delta=96, theta=4, plan=plan,
                         race=False)
+
+    # events-scale distributed sort in isolation (PR 4): wall time plus the
+    # bytes/shard the legacy gathered sort would have all-gathered vs the
+    # splitter sample that now travels instead
+    caps = Caps.for_host(hg)
+    per = -(-caps.p // n_dev)
+    L = 2 * per * n_dev            # inbound-events pipeline length
+    ctx = (segops.ShardCtx(axis="model", nshards=n_dev) if n_dev > 1
+           else segops.ShardCtx())
+    rng = np.random.default_rng(0)
+    ka = jnp.asarray(rng.integers(0, 8, L).astype(np.int32))
+    kb = jnp.asarray(rng.integers(0, max(hg.n_edges, 1), L).astype(np.int32))
+    ks = jnp.asarray(rng.permutation(L).astype(np.int32))
+    pv = jnp.arange(L, dtype=jnp.int32)
+
+    def body(a, b, c, p):
+        ks_, ps_ = ctx.sort_by(
+            [ctx.stripe(a), ctx.stripe(b), ctx.stripe(c)], [ctx.stripe(p)],
+            striped_in=True, striped_out=True)
+        return (*ks_, *ps_)
+
+    f = jax.jit(common.shard_map(body, mesh=mesh, in_specs=(P(),) * 4,
+                                 out_specs=(P("model"),) * 4))
+    jax.block_until_ready(f(ka, kb, ks, pv))
+    t0 = time.perf_counter()
+    jax.block_until_ready(f(ka, kb, ks, pv))
+    sort_s = time.perf_counter() - t0
+    q = max(1, min(per * 2, 4 * n_dev))
     print(json.dumps(dict(refine_s=res.timings["refine"],
                           coarsen_s=res.timings["coarsen"],
                           total_s=res.timings["total"],
+                          sort_s=sort_s,
+                          sort_gather_B=int(L) * 4 * 4,
+                          sort_splitter_B=n_dev * q * 4 * 4,
                           connectivity=res.connectivity,
                           n_parts=res.n_parts)))
 """)
@@ -80,7 +119,9 @@ def run() -> list[str]:
         out.append(row(
             f"dist_scaling/dev{n}", m["refine_s"] * 1e6,
             f"coarsen_s={m['coarsen_s']:.3f} refine_s={m['refine_s']:.3f} "
-            f"total_s={m['total_s']:.3f} "
+            f"sort_s={m['sort_s']:.4f} total_s={m['total_s']:.3f} "
+            f"sort_gather_B={m['sort_gather_B']} "
+            f"sort_splitter_B={m['sort_splitter_B']} "
             f"conn={m['connectivity']:.0f} {rel}"))
     return out
 

@@ -13,12 +13,12 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig7,fig8,fig15,fig16,tab2,roofline,"
-                         "proofline,dist")
+                         "proofline,dist,dist_sort")
     args = ap.parse_args(argv)
 
-    from benchmarks import (dist_scaling, fig7_snn_comparison, fig8_breakdown,
-                            fig15_kway, fig16_ablations, partitioner_roofline,
-                            roofline, tab2_work_span)
+    from benchmarks import (dist_scaling, dist_sort, fig7_snn_comparison,
+                            fig8_breakdown, fig15_kway, fig16_ablations,
+                            partitioner_roofline, roofline, tab2_work_span)
     mods = {
         "fig7": fig7_snn_comparison,
         "fig8": fig8_breakdown,
@@ -28,6 +28,7 @@ def main(argv=None) -> None:
         "roofline": roofline,
         "proofline": partitioner_roofline,
         "dist": dist_scaling,
+        "dist_sort": dist_sort,
     }
     want = args.only.split(",") if args.only else list(mods)
     print("name,us_per_call,derived")

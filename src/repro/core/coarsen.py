@@ -92,8 +92,14 @@ def score_slots(d: DeviceHypergraph, nbrs: Neighborhoods,
     iters = max(1, math.ceil(math.log2(caps.nbrs + 1)) + 1)
     slot = segops.searchsorted_segmented(nbrs.ids, lo, hi, pairs.m, iters)
     slot = jnp.where(pairs.valid, slot, caps.nbrs)
-    eta = jax.ops.segment_sum(ctx.gather(pairs.w_norm), ctx.gather(slot),
-                              num_segments=caps.nbrs + 1)[: caps.nbrs]
+    if ctx.compensated:
+        # opt-in O(dense) combine: Neumaier-compensated psum of per-shard
+        # partials (~1 ulp of the true sum, not bit-identical to one device)
+        eta = ctx.psum_compensated(jax.ops.segment_sum(
+            pairs.w_norm, slot, num_segments=caps.nbrs + 1)[: caps.nbrs])
+    else:
+        eta = jax.ops.segment_sum(ctx.gather(pairs.w_norm), ctx.gather(slot),
+                                  num_segments=caps.nbrs + 1)[: caps.nbrs]
     inter = ctx.psum(jax.ops.segment_sum(
         pairs.both_dst.astype(jnp.int32), slot,
         num_segments=caps.nbrs + 1))[: caps.nbrs]

@@ -17,14 +17,17 @@ shrink), exactly as in the paper.
 
 Sharding (``ctx`` a ``segops.ShardCtx``, inside ``dist.partition``'s
 shard_map): key construction runs on per-shard contiguous pin-lane stripes
-(CSR row ids via stripe-local binary search), the sort gathers its compact
-key columns (same compromise as the refinement events sort; a distributed
-sort is an open ROADMAP item), the rank scans run stripe-local with
-cross-shard carries (``sharded_segmented_scan``), and the packed pins /
-per-edge / per-node counts combine by psum of disjoint (or integer) dense
-partials. Every value in this pipeline is an integer, so the sharded
-contraction is bit-exact with the single-device one by construction — no
-float accumulation order to preserve.
+(CSR row ids via stripe-local binary search), both key sorts run through
+the distributed sample sort (``ctx.sort_by``: stripes in, stripes of the
+globally sorted order out — only O(shards * samples) splitter keys are
+gathered, the payload rides static-shape all_to_all exchanges), dedup /
+per-edge boundary flags come from stripe-boundary-aware start flags, the
+rank scans run stripe-local with cross-shard carries
+(``sharded_segmented_scan``), and the packed pins / per-edge / per-node
+counts and the rebuilt incidence arrays combine by psum of disjoint (or
+integer) dense partials (``unstripe``). Every value in this pipeline is an
+integer, so the sharded contraction is bit-exact with the single-device one
+by construction — no float accumulation order to preserve.
 """
 from __future__ import annotations
 
@@ -76,22 +79,20 @@ def contract_impl(d: DeviceHypergraph, match: jax.Array, caps: Caps,
     rel = t - d.edge_off[e_safe]
     is_dst = pin_live & (rel >= d.edge_nsrc[e_safe])
 
-    k_e = ctx.gather(jnp.where(pin_live, e_of, IMAX))
-    k_p = ctx.gather(pprime)
-    k_r = ctx.gather(_role_key(is_dst))
-    (se, sp, sr), _ = segops.sort_by([k_e, k_p, k_r], [jnp.zeros_like(k_e)])
-    starts = segops.segment_starts_from_sorted([se, sp])
-    e_start = segops.segment_starts_from_sorted([se])
-    keep = starts & (se != IMAX) & (sp != IMAX)
-    kept_dst = keep & (sr == 0)  # first occurrence carries the merged role
-    kept_src = keep & (sr == 1)
+    k_e = jnp.where(pin_live, e_of, IMAX)
+    k_p = pprime
+    k_r = _role_key(is_dst)
+    # distributed sample sort: stripes in, stripes of the sorted order out
+    # (only splitter samples gather); dedup flags are stripe-boundary-aware
+    (se_l, sp_l, sr_l), _ = ctx.sort_by([k_e, k_p, k_r], [],
+                                        striped_in=True, striped_out=True)
+    starts_l = ctx.starts_from_sorted([se_l, sp_l])
+    e_start_l = ctx.starts_from_sorted([se_l])
+    keep_l = starts_l & (se_l != IMAX) & (sp_l != IMAX)
+    kept_dst_l = keep_l & (sr_l == 0)  # first occurrence carries merged role
+    kept_src_l = keep_l & (sr_l == 1)
 
     # per-edge counts from the kept set (integers — psum is exact)
-    se_l = ctx.stripe(se)
-    sp_l = ctx.stripe(sp)
-    keep_l = ctx.stripe(keep)
-    kept_src_l = ctx.stripe(kept_src)
-    kept_dst_l = ctx.stripe(kept_dst)
     seg_e = jnp.where(keep_l, se_l, caps.e)
     ones_l = jnp.ones(se_l.shape, jnp.int32)
     counts_e = ctx.psum(jax.ops.segment_sum(
@@ -106,7 +107,6 @@ def contract_impl(d: DeviceHypergraph, match: jax.Array, caps: Caps,
     # segmented scans with cross-shard carries, then a disjoint scatter to
     # edge_off_new[e] (+ nsrc for dst) + rank — src pins first, coarse-id
     # ascending within each role (the kept order is already p'-ascending)
-    e_start_l = ctx.stripe(e_start)
     src_rank, _ = ctx.segmented_scan(kept_src_l.astype(jnp.int32), e_start_l)
     dst_rank, _ = ctx.segmented_scan(kept_dst_l.astype(jnp.int32), e_start_l)
     se_safe = jnp.clip(se_l, 0, caps.e - 1)
@@ -124,20 +124,24 @@ def contract_impl(d: DeviceHypergraph, match: jax.Array, caps: Caps,
     e2_safe = jnp.clip(e2, 0, caps.e - 1)
     rel2 = t - edge_off_new[e2_safe]
     isdst2 = t2_live & (rel2 >= nsrc_new[e2_safe])
-    node2 = ctx.gather(ctx.take(pins_new, t, t2_live, IMAX))
-    inkey = ctx.gather(jnp.where(isdst2, 0, 1))  # inbound edges first
-    key_e = ctx.gather(jnp.where(t2_live, e2, IMAX))
-    (sn2, sk2, se2), (sin2,) = segops.sort_by(
-        [node2, inkey, key_e], [ctx.gather(isdst2.astype(jnp.int32))])
-    node_edges_new = jnp.where(sn2 != IMAX, se2, NSENT)[: caps.p]
-    node_is_in_new = ((sin2 == 1) & (sn2 != IMAX))[: caps.p]
-    sn2_l = ctx.stripe(sn2)
+    node2 = ctx.take(pins_new, t, t2_live, IMAX)
+    inkey = jnp.where(isdst2, 0, 1)  # inbound edges first
+    key_e = jnp.where(t2_live, e2, IMAX)
+    (sn2_l, sk2_l, se2_l), (sin2_l,) = ctx.sort_by(
+        [node2, inkey, key_e], [isdst2.astype(jnp.int32)],
+        striped_in=True, striped_out=True)
+    # the replicated incidence arrays rebuild from the sorted stripes by
+    # psum of disjoint stripe scatters (`unstripe`) — integer, exact
+    node_edges_new = ctx.unstripe(
+        jnp.where(sn2_l != IMAX, se2_l, NSENT))[: caps.p]
+    node_is_in_new = ctx.unstripe(
+        (sin2_l == 1) & (sn2_l != IMAX))[: caps.p]
     segn = jnp.where(sn2_l != IMAX, sn2_l, caps.n)
     counts_n = ctx.psum(jax.ops.segment_sum(
         jnp.ones(sn2_l.shape, jnp.int32), segn,
         num_segments=caps.n + 1))[: caps.n]
     nin_new = ctx.psum(jax.ops.segment_sum(
-        ((ctx.stripe(sin2) == 1) & (sn2_l != IMAX)).astype(jnp.int32), segn,
+        ((sin2_l == 1) & (sn2_l != IMAX)).astype(jnp.int32), segn,
         num_segments=caps.n + 1))[: caps.n]
     node_off_new = segops.offsets_from_counts(counts_n).astype(jnp.int32)
 

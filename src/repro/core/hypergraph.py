@@ -307,22 +307,35 @@ def build_neighbors(pairs: PairExpansion, d: DeviceHypergraph, caps: Caps,
     CSR with deterministic ordering.
 
     ``ctx`` (a ``segops.ShardCtx``): ``pairs`` is then one shard's lane
-    stripe and the key columns gather in stripe order — the global lane
-    order — before the replicated sort (same gathered-sort compromise as
-    the refinement events pipeline; a distributed sort is an open ROADMAP
-    item), so the result is bit-identical to the single-device build.
+    stripe; the (n, m) keys go through the distributed sample sort
+    (``ctx.sort_by``, stripes in / stripes out — only splitter samples are
+    gathered), dedup flags come from stripe-boundary-aware start flags, the
+    compaction positions from a cross-shard cumsum carry, and the dense
+    neighborhood arrays combine by psum of disjoint scatters. Bit-identical
+    to the single-device build, which remains the ``ctx=None`` degenerate
+    case of the same code path.
     """
     from repro.utils import segops
 
     if ctx is None:
         ctx = segops.ShardCtx()
-    keyn = ctx.gather(jnp.where(pairs.valid, pairs.n, NSENT))
-    keym = ctx.gather(jnp.where(pairs.valid, pairs.m, NSENT))
-    (skn, skm), _ = segops.sort_by([keyn, keym], [jnp.zeros_like(keyn)])
-    starts = segops.segment_starts_from_sorted([skn, skm])
+    keyn = jnp.where(pairs.valid, pairs.n, NSENT)
+    keym = jnp.where(pairs.valid, pairs.m, NSENT)
+    (skn, skm), _ = ctx.sort_by([keyn, keym], [], striped_in=True,
+                                striped_out=True)
+    starts = ctx.starts_from_sorted([skn, skm])
     keep = starts & (skn != NSENT)
-    ids, n_entries = segops.scatter_compact(skm, keep, caps.nbrs, NSENT)
-    owner, _ = segops.scatter_compact(skn, keep, caps.nbrs, NSENT)
+    f = keep.astype(jnp.int32)
+    pos = ctx.cumsum(f) - f                      # global compaction slots
+    n_entries = ctx.psum(jnp.sum(f))
+    slot = jnp.where(keep, jnp.minimum(pos, caps.nbrs), caps.nbrs)
+    live = jnp.arange(caps.nbrs, dtype=jnp.int32) < n_entries
+    ids = ctx.psum(jnp.zeros((caps.nbrs + 1,), jnp.int32)
+                   .at[slot].set(skm, mode="drop")[: caps.nbrs])
+    ids = jnp.where(live, ids, NSENT)
+    owner = ctx.psum(jnp.zeros((caps.nbrs + 1,), jnp.int32)
+                     .at[slot].set(skn, mode="drop")[: caps.nbrs])
+    owner = jnp.where(live, owner, NSENT)
     counts = jax.ops.segment_sum(
         jnp.ones_like(owner), jnp.where(owner == NSENT, caps.n, owner),
         num_segments=caps.n + 1)[: caps.n]

@@ -67,14 +67,15 @@ def partition_kway(hg: HostHypergraph, k: int, eps: float = 0.03,
                    max_levels: int = 64,
                    plan=None, race: bool = True,
                    race_seed: int = 0,
-                   dist_coarsen: bool = True) -> PartitionResult:
+                   dist_coarsen: bool = True,
+                   compensated_psum: bool = False) -> PartitionResult:
     """k-way balanced partitioning; cut-net results from minimizing
     connectivity, exactly as the paper frames it.
 
-    plan/race/race_seed/dist_coarsen mirror `partitioner.partition`: with a
-    `Plan`, each coarsening level runs mesh-sharded via
-    `dist.partition.coarsen_level`/`contract_level` and each refinement
-    level as mesh-raced replicas with sharded pipelines via
+    plan/race/race_seed/dist_coarsen/compensated_psum mirror
+    `partitioner.partition`: with a `Plan`, each coarsening level runs
+    mesh-sharded via `dist.partition.coarsen_level`/`contract_level` and
+    each refinement level as mesh-raced replicas with sharded pipelines via
     `dist.partition.refine_level`."""
     t0 = time.perf_counter()
     omega = max(int((1 + eps) * hg.n_nodes / k), math.ceil(hg.n_nodes / k))
@@ -86,7 +87,8 @@ def partition_kway(hg: HostHypergraph, k: int, eps: float = 0.03,
         coarse_target = min(4096, max(4 * k, 64))
 
     levels, gammas, log = [], [], []
-    _coarsen, _contract = make_coarsen_fns(cparams, plan, dist_coarsen)
+    _coarsen, _contract = make_coarsen_fns(cparams, plan, dist_coarsen,
+                                           compensated=compensated_psum)
     t_coarsen = time.perf_counter()
     while int(d.n_nodes) > coarse_target and len(gammas) < max_levels:
         match, n_pairs = _coarsen(d, caps)

@@ -44,14 +44,18 @@ def _next_pow2(x: int) -> int:
     return 1 << max(0, math.ceil(math.log2(max(1, x))))
 
 
-def make_coarsen_fns(cparams: CoarsenParams, plan, dist_coarsen: bool = True):
+def make_coarsen_fns(cparams: CoarsenParams, plan, dist_coarsen: bool = True,
+                     compensated: bool = False):
     """Per-level coarsening dispatchers shared by `partition` and
     `kway.partition_kway`: returns `(coarsen(d, caps) -> (match, n_pairs),
     contract(d, match, caps) -> (d2, gamma))`. With a `Plan` (and
     `dist_coarsen`), both run on the mesh via `dist.partition.coarsen_level`
     / `contract_level` — bit-exact with the single-device pair when
     `use_kernels=False` (the mesh path replaces the Pallas kernels with the
-    striped pipeline, whose eta fp order differs from the kernel's)."""
+    striped pipeline, whose eta fp order differs from the kernel's).
+    ``compensated`` opts the eta / matching-sum0 float reductions into the
+    Neumaier-compensated psum (O(dense) traffic, ~1 ulp, not
+    bit-identical)."""
     if plan is None or not dist_coarsen:
         def _coarsen(d_, caps_):
             match, n_pairs, _ = coarsen_step(d_, caps_, cparams)
@@ -63,7 +67,8 @@ def make_coarsen_fns(cparams: CoarsenParams, plan, dist_coarsen: bool = True):
         import repro.dist.partition as dist_partition
 
         def _coarsen(d_, caps_):
-            return dist_partition.coarsen_level(d_, caps_, cparams, plan)
+            return dist_partition.coarsen_level(d_, caps_, cparams, plan,
+                                                compensated=compensated)
 
         def _contract(d_, match_, caps_):
             return dist_partition.contract_level(d_, match_, caps_, plan)
@@ -100,7 +105,8 @@ def partition(hg: HostHypergraph, omega: int, delta: int,
               bucket: bool = False,
               plan=None, race: bool = True,
               race_seed: int = 0,
-              dist_coarsen: bool = True) -> PartitionResult:
+              dist_coarsen: bool = True,
+              compensated_psum: bool = False) -> PartitionResult:
     """Full multi-level constrained partitioning (paper's SNN mode).
 
     bucket=True enables pow2 capacity re-bucketing between levels (perf
@@ -117,7 +123,10 @@ def partition(hg: HostHypergraph, omega: int, delta: int,
     `dist.partition.refine_level`: repetitions race as replicas across the
     mesh's data axis (`race=False` for the deterministic parity mode) and
     the pins-sized pipelines shard across its model axis. `race_seed`
-    decorrelates the replica tie-break permutations.
+    decorrelates the replica tie-break permutations. `compensated_psum`
+    opts the coarsening eta / matching-sum0 float reductions into the
+    Neumaier-compensated psum (O(dense) traffic instead of the stripe-order
+    lane gather; within ~1 ulp but not bit-identical to one device).
     """
     from repro.core.hypergraph import shrink_device
 
@@ -130,7 +139,8 @@ def partition(hg: HostHypergraph, omega: int, delta: int,
     target = max(1, math.ceil(hg.n_nodes / omega))
     levels, gammas = [], []
     log: list = []
-    _coarsen, _contract = make_coarsen_fns(cparams, plan, dist_coarsen)
+    _coarsen, _contract = make_coarsen_fns(cparams, plan, dist_coarsen,
+                                           compensated=compensated_psum)
     t_coarsen = time.perf_counter()
     while int(d.n_nodes) > target and len(gammas) < max_levels:
         match, n_pairs = _coarsen(d, caps)

@@ -14,8 +14,9 @@ Pipeline per repetition (Theta total, default 16):
 
 CUDA -> TPU mapping: warp-per-node gain loops become segment reductions /
 the Pallas `gains` kernel; CUB sort+scan become `lax.sort` (multi-key) +
-segmented `associative_scan`; atomic grade claims become segment-argmax with
-id tie-breaks.
+segmented `associative_scan` — on a mesh, the distributed sample sort
+(`ShardCtx.sort_by`) + stripe-local scans with cross-shard carries; atomic
+grade claims become segment-argmax with id tie-breaks.
 
 Every pins/pairs-sized stage threads an optional `segops.ShardCtx`: with a
 mesh axis set (inside `dist.partition`'s shard_map) the stage processes one
@@ -160,7 +161,8 @@ def propose_moves(d: DeviceHypergraph, parts: jax.Array, pins: jax.Array,
 def build_sequence(d: DeviceHypergraph, parts: jax.Array, move_to: jax.Array,
                    gain: jax.Array, caps: Caps, kcap: int,
                    params: RefineParams, tie_rank: jax.Array | None = None,
-                   with_aux: bool = False):
+                   with_aux: bool = False,
+                   ctx: segops.ShardCtx = segops.ShardCtx()):
     """Orders moves into gain-ranked chains; returns seq[Ncap] (IMAX for
     non-movers) and n_movers.
 
@@ -170,7 +172,10 @@ def build_sequence(d: DeviceHypergraph, parts: jax.Array, move_to: jax.Array,
     replica-racing mode of ``dist.partition`` distinct (equally greedy)
     chains per device; the identity reproduces the single-device sequence
     bit-for-bit. ``with_aux`` additionally returns the pred/head arrays for
-    the oracle/property tests."""
+    the oracle/property tests. The mover and chain-head orderings run
+    through ``ctx.sort_by`` (replicated in/out — the windowed candidate
+    lookup needs the whole sorted order), so on a mesh the sort work
+    distributes while the result stays replicated and bit-identical."""
     ids = jnp.arange(caps.n, dtype=jnp.int32)
     rank = ids if tie_rank is None else tie_rank
     mover = move_to >= 0
@@ -179,7 +184,7 @@ def build_sequence(d: DeviceHypergraph, parts: jax.Array, move_to: jax.Array,
 
     # sort movers by (ps, -gain, rank): per-source-partition gain-descending
     gkey = jnp.where(mover, -gain, jnp.float32(jnp.inf))
-    (_, _, _), (order,) = segops.sort_by([ps, gkey, rank], [ids])
+    (_, _, _), (order,) = ctx.sort_by([ps, gkey, rank], [ids])
     # segment start offset per partition
     cnt_p = jax.ops.segment_sum(jnp.ones((caps.n,), jnp.int32), ps,
                                 num_segments=kcap + 1)[:kcap]
@@ -250,7 +255,7 @@ def build_sequence(d: DeviceHypergraph, parts: jax.Array, move_to: jax.Array,
                                     num_segments=caps.n + 1)[: caps.n]
     is_head = mover & (head == ids)
     hkey = jnp.where(is_head, -chain_gain, jnp.float32(jnp.inf))
-    (_, _), (horder,) = segops.sort_by([hkey, rank], [ids])
+    (_, _), (horder,) = ctx.sort_by([hkey, rank], [ids])
     # chain start offsets in ranked order
     rlen = jnp.where(is_head[horder], chain_len[horder], 0)
     roff = jnp.concatenate([jnp.zeros((1,), jnp.int32),
@@ -357,11 +362,14 @@ def events_validity(d: DeviceHypergraph, parts: jax.Array,
     running sizes / distinct counts stayed below 2**24.
 
     Sharded mode (``ctx.axis`` set): the pins-sized inbound-event pipeline
-    is distributed — event construction and the segmented scans run on each
-    device's contiguous lane stripe (cross-shard scan carries via
-    ``ShardCtx.segmented_scan``), and the per-seq violation deltas are
-    psum-combined dense vectors. The event *sort* gathers its compact key
-    columns first (a distributed merge sort is an open ROADMAP item); the
+    is fully distributed — event construction, both event *sorts*
+    (``ShardCtx.sort_by``: the sample sort of ``repro.dist.sort``, stripes
+    in / stripes of the sorted order out, only splitter samples gathered)
+    and the segmented scans all run on each device's contiguous lane stripe
+    (cross-shard scan carries via ``ShardCtx.segmented_scan``, sorted-key
+    segment starts and group closings via the scalar boundary exchanges
+    ``starts_from_sorted`` / ``edge_prev`` / ``edge_next``), and the
+    per-seq violation deltas are psum-combined dense vectors. The
     node-sized size-event pipeline stays replicated — it is O(N), dominated
     by the O(pins) inbound pipeline."""
     mover = move_to >= 0
@@ -404,44 +412,42 @@ def events_validity(d: DeviceHypergraph, parts: jax.Array,
     ie_s = jnp.concatenate([jnp.where(is_ev, seq[n_safe], IMAX)] * 2)
     ie_d = jnp.concatenate([jnp.where(is_ev, -1, 0),
                             jnp.where(is_ev, 1, 0)]).astype(jnp.int32)
-    # global (p, e, seq) order: gather the compact event columns, sort, then
-    # hand each shard its contiguous stripe of the sorted order. Live event
-    # keys are unique (seq is a permutation, pins are unique per edge), so
-    # the sorted order is independent of the pre-sort shard interleaving.
-    ipf, ief, isf, idf = map(ctx.gather, (ie_p, ie_e, ie_s, ie_d))
-    (ipf, ief, isf), (idf,) = segops.sort_by([ipf, ief, isf], [idf])
-    pe_start = segops.segment_starts_from_sorted([ipf, ief])
-    basef = pins_in[jnp.clip(ipf, 0, kcap - 1), jnp.clip(ief, 0, caps.e - 1)]
-    ip = ctx.stripe(ipf)
-    ie = ctx.stripe(ief)
-    isq = ctx.stripe(isf)
-    pe_start_s = ctx.stripe(pe_start)
-    base = ctx.stripe(basef)
-    cum_pe, carry_pe = ctx.segmented_scan(ctx.stripe(idf), pe_start_s)
+    # global (p, e, seq) order via the distributed sample sort: each shard
+    # passes its event-lane stripe and receives its contiguous stripe of
+    # the sorted order — only splitter samples are ever gathered
+    # (``dist.sort``; bit-identical to the old gather-sort-stripe). Live
+    # event keys are unique (seq is a permutation, pins are unique per
+    # edge), so the sorted order is independent of shard interleaving.
+    (ip, ie, isq), (idv,) = ctx.sort_by([ie_p, ie_e, ie_s], [ie_d],
+                                        striped_in=True, striped_out=True)
+    pe_start_s = ctx.starts_from_sorted([ip, ie])
+    base = pins_in[jnp.clip(ip, 0, kcap - 1), jnp.clip(ie, 0, caps.e - 1)]
+    cum_pe, carry_pe = ctx.segmented_scan(idv, pe_start_s)
     run = base + cum_pe
-    # `run` at the element just before this stripe: its base is known from
-    # the replicated keys, its scan value is the incoming carry
-    prev_idx = jnp.maximum(ctx.stripe_start(ipf.shape[0]) - 1, 0)
-    run_prev = jnp.concatenate([(basef[prev_idx] + carry_pe)[None], run[:-1]])
+    # `run` at the element just before this stripe: its (p, e) key rides in
+    # on a scalar boundary exchange, its scan value is the incoming carry
+    prev_p = ctx.edge_prev(ip, ip[0])[0]
+    prev_e = ctx.edge_prev(ie, ie[0])[0]
+    prev_base = pins_in[jnp.clip(prev_p, 0, kcap - 1),
+                        jnp.clip(prev_e, 0, caps.e - 1)]
+    run_prev = jnp.concatenate([(prev_base + carry_pe)[None], run[:-1]])
     prev_run = jnp.where(pe_start_s, base, run_prev)
     live_ev = (ip < kcap) & (ie < caps.e)
     up = live_ev & (prev_run == 0) & (run > 0)     # 0 -> 1 : new distinct edge
     dn = live_ev & (prev_run > 0) & (run == 0)     # 1 -> 0 : edge left p
     dd = up.astype(jnp.int32) - dn.astype(jnp.int32)
-    # distinct-count running value per (p, seq): sort by (p, seq) — same
-    # gather-sort-stripe pattern over the transition deltas
-    dpf, dsf, ddf = map(ctx.gather, (jnp.where(dd != 0, ip, kcap),
-                                     jnp.where(dd != 0, isq, IMAX), dd))
-    (dpf, dsf), (ddf,) = segops.sort_by([dpf, dsf], [ddf])
-    p_start2 = segops.segment_starts_from_sorted([dpf])
-    # per-(p,seq) group: state observable at the last event of the group
-    grp_lastf = jnp.concatenate([
-        (dpf[1:] != dpf[:-1]) | (dsf[1:] != dsf[:-1]), jnp.ones((1,), bool)])
-    dp2 = ctx.stripe(dpf)
-    ds2 = ctx.stripe(dsf)
-    p_start2_s = ctx.stripe(p_start2)
-    grp_last = ctx.stripe(grp_lastf)
-    cum2, _ = ctx.segmented_scan(ctx.stripe(ddf), p_start2_s)
+    # distinct-count running value per (p, seq): same striped sample sort
+    # over the transition deltas
+    (dp2, ds2), (dd2,) = ctx.sort_by(
+        [jnp.where(dd != 0, ip, kcap), jnp.where(dd != 0, isq, IMAX)], [dd],
+        striped_in=True, striped_out=True)
+    p_start2_s = ctx.starts_from_sorted([dp2])
+    # per-(p,seq) group: state observable at the last event of the group;
+    # the stripe's last element peeks at the next shard's first key (-1
+    # fill: past the globally last element every group is closed)
+    grp_last = ((ctx.edge_next(dp2, -1) != dp2)
+                | (ctx.edge_next(ds2, -1) != ds2))
+    cum2, _ = ctx.segmented_scan(dd2, p_start2_s)
     distinct_after = init_distinct[jnp.clip(dp2, 0, kcap - 1)] + cum2
     inv_i = (dp2 < kcap) & (distinct_after > params.delta)
     # forward-fill last group state within p-segment (value+1; 0 = none yet)
@@ -509,7 +515,7 @@ def refine_step_impl(d: DeviceHypergraph, parts: jax.Array,
     move_to, gain_iso, _ = propose_moves(
         d, parts, pins, caps, kcap, params, enforce_size, n_parts, ctx)
     seq, _ = build_sequence(d, parts, move_to, gain_iso, caps, kcap, params,
-                            tie_rank=tie_rank)
+                            tie_rank=tie_rank, ctx=ctx)
     gain_seq = inseq_gains(d, parts, pins, move_to, gain_iso, seq, caps,
                            kcap, ctx)
     apply_mask, applied_gain = events_validity(

@@ -3,3 +3,4 @@ from repro.dist.sharding import Plan  # noqa: F401
 # bound as the submodule (not its `partition` function) so that
 # `repro.dist.partition.refine_level` / `.partition` both resolve
 from repro.dist import partition  # noqa: F401
+from repro.dist import sort  # noqa: F401  (distributed sample sort)

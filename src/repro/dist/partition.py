@@ -35,9 +35,9 @@ Paper Sec. VI kernel -> sharded counterpart:
   pair-expansion Eq. 14/15 (VI-C)      -> `refine.inseq_gains(ctx)`: pair
       lanes striped via `build_pairs(idx)`, psum'd (n,e) counts
   CUB sort + segmented scan (VI-D)     -> `refine.events_validity(ctx)`:
-      striped event construction, gathered compact-column sort (distributed
-      merge sort is an open ROADMAP item), stripe-local scans with
-      cross-shard carries, psum'd violation deltas
+      striped event construction, distributed sample sort (`dist.sort` via
+      `ShardCtx.sort_by` — stripes in/out, only splitter samples gathered),
+      stripe-local scans with cross-shard carries, psum'd violation deltas
 
 Coarsening (`coarsen_level` / `contract_level`, paper Sec. V-B..V-E) shards
 the same way over "model" and is deterministic, so it never races — on a
@@ -54,8 +54,8 @@ Paper kernel -> sharded counterpart:
   matching DP wavefront Eq. 7-12 (V-D)  -> `matching.match_pseudoforest
       (ctx)`: replicated state, child-lane stripes per iteration
   contraction dedup + packing (V-E)     -> `contract.contract_impl(ctx)`:
-      striped key construction, gathered-key sorts, stripe-local rank scans
-      with cross-shard carries, psum'd disjoint scatters
+      striped key construction, distributed sample sorts, stripe-local rank
+      scans with cross-shard carries, psum'd disjoint scatters
 
 What travels how — the exactness contract. Float32 addition is not
 associative, so a psum of float partial sums lands within an ulp of — but
@@ -71,8 +71,13 @@ of three combines:
   * gather   — float sums (eta histograms, matching sum0 pushes) gather
                their lane columns in stripe order, i.e. the global lane
                order, and reduce replicated: the scatter-add order is then
-               bit-identical to the single-device sweep. Sort key columns
-               gather the same way (distributed sort: open ROADMAP item).
+               bit-identical to the single-device sweep. (Opt-in
+               `compensated` trades this for a Neumaier-compensated psum
+               of dense partials — O(dense) traffic, ~1 ulp, not
+               bit-identical.) Sorts no longer gather at all: every sort is
+               the distributed sample sort of `dist.sort`, whose global-rank
+               tie key makes it bit-identical to the gathered stable
+               `lax.sort` by construction.
 
 Contraction is bit-exact by construction — its whole pipeline is integer —
 so the contracted hypergraph, not just the final parts vector, matches the
@@ -193,10 +198,14 @@ def refine_level(d, parts, n_parts, caps: Caps, kcap: int,
 
 @functools.lru_cache(maxsize=None)
 def _build_coarsen_step(mesh, model_axis: str | None, nshards: int,
-                        caps: Caps, cparams: CoarsenParams):
+                        caps: Caps, cparams: CoarsenParams,
+                        compensated: bool = False):
     """One sharded coarsening level (proposal + matching), jitted; cached
-    per static signature like `_build_step`."""
-    ctx = segops.ShardCtx(axis=model_axis, nshards=nshards)
+    per static signature like `_build_step`. ``compensated`` opts the eta /
+    matching-sum0 float reductions into `ShardCtx.psum_compensated`
+    (O(dense) traffic, ~1 ulp, not bit-identical — see segops)."""
+    ctx = segops.ShardCtx(axis=model_axis, nshards=nshards,
+                          compensated=compensated)
 
     def body(d):
         match, n_pairs, _ = coarsen_step_impl(d, caps, cparams, ctx)
@@ -219,13 +228,19 @@ def _build_contract(mesh, model_axis: str | None, nshards: int, caps: Caps):
     return jax.jit(fn)
 
 
-def coarsen_level(d, caps: Caps, cparams: CoarsenParams, plan: Plan):
+def coarsen_level(d, caps: Caps, cparams: CoarsenParams, plan: Plan,
+                  compensated: bool = False):
     """Drop-in for `core.coarsen.coarsen_step` on a mesh (without the
     proposals debug output): one coarsening level with the pairs/slot
     pipelines sharded over the plan's model axis. Deterministic — never
     raced — and bit-exact with the single-device step (see the module
     docstring for the psum / pmax / gather combine discipline).
     Returns (match[Ncap], n_matched_pairs).
+
+    ``compensated=True`` trades that bit-exactness for traffic: the eta and
+    matching-sum0 float reductions combine per-shard dense partials with a
+    Neumaier-compensated psum (within ~1 ulp of the true sum) instead of
+    gathering their lane columns in stripe order.
 
     Caveat (same as `refine_level`): with `use_kernels=True` the Pallas
     kernel path is replaced by the striped segment pipeline, whose eta sums
@@ -237,7 +252,8 @@ def coarsen_level(d, caps: Caps, cparams: CoarsenParams, plan: Plan):
         # replaces them (same segment reductions, striped)
         cparams = dataclasses.replace(cparams, use_kernels=False)
     _, model_axis, nshards = plan_axes(plan)
-    step = _build_coarsen_step(plan.mesh, model_axis, nshards, caps, cparams)
+    step = _build_coarsen_step(plan.mesh, model_axis, nshards, caps, cparams,
+                               bool(compensated))
     return step(d)
 
 

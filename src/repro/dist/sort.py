@@ -1,0 +1,291 @@
+"""Distributed stable multi-key sample sort over a ``segops.ShardCtx``.
+
+This is the missing CUB-device-radix-sort analogue for the mesh: every sort
+in the V-cycle (refinement events, mover/holder chain orderings, coarsening
+neighborhood builds, both contraction key sorts) used to all-gather its
+compact key columns to every shard and run the stable ``lax.sort``
+replicated — O(pins) communication per sort. This module replaces that with
+a PSRS-style sample sort whose only *gathered* key data is the splitter
+sample (O(nshards^2 * oversample) keys); the payload moves through
+static-shape ``all_to_all`` exchanges sized O(len/nshards) per shard.
+
+Pipeline (inside ``shard_map``, each shard holding stripe ``i`` of the
+global concatenation order):
+
+  1. **Rank-extend + local sort.** A global-rank column (``stripe_start +
+     arange``) is appended as the least-significant key. Float32 key
+     columns are mapped through ``segops.f32_sort_key`` — the uint32 image
+     of ``lax.sort``'s canonicalized float total order (-0.0 == +0.0, all
+     NaNs one class after +inf) — so integer comparisons agree with the
+     gathered float sort everywhere; the original float bits ride along as
+     payloads. Extended keys are globally unique, so *any* correct sort of
+     them equals the stable sort of the original keys: bit-identity with
+     the gathered ``lax.sort(..., is_stable=True)`` is by construction, not
+     by luck.
+  2. **Splitters from a gathered sample** (regular sampling): each shard
+     contributes ``oversample`` evenly spaced locally-sorted keys; the
+     ``nshards * oversample`` sample tuples are all-gathered, sorted
+     replicated, and every ``oversample``-th tuple becomes a splitter.
+  3. **Bucketing** by vectorized lexicographic splitter comparison (the
+     multi-key ``searchsorted``): bucket(x) = #splitters <= x.
+  4. **Static-shape all_to_all exchange.** Per-destination counts are
+     all-gathered (``[s, s]`` ints) into send/recv offsets. Own-bucket
+     elements stay local; off-diagonal elements pack into ``[s, C]``
+     blocks (C = ``exchange_capacity``) and ride one all_to_all.
+  5. **Local merge** (sort of kept + received by extended key), then a
+     second offset-computed all_to_all **rebalances** bucket boundaries to
+     exact stripe boundaries, so shard ``i`` ends holding precisely global
+     sorted positions ``[i*per, (i+1)*per)`` — the same stripe the old
+     gather-sort-stripe pattern produced.
+
+Skew safety: per-pair block counts are data-dependent and unbounded in the
+worst case (regular sampling only bounds *totals*), so both exchanges'
+off-diagonal counts — all derivable replicated from the ``[s, s]`` count
+matrix *before* any data moves — are checked against the static capacity,
+and on overflow the whole sort takes a uniform ``lax.cond`` branch that
+gathers and sorts replicated (the legacy pattern, still bit-identical).
+Nearly-sorted inputs (the common case here: event keys correlate with lane
+order) are diagonal-heavy, which costs nothing — the diagonal never rides
+the exchange.
+
+Entry point for pipeline code is ``segops.ShardCtx.sort_by``; this module
+is the implementation plus its diagnostics hook.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import segops
+
+# NB: no module-level jnp constants here — this module is lazily imported
+# inside jitted traces (ShardCtx.sort_by), where a module-level jnp value
+# would be born a tracer and leak to later eager callers.
+
+
+def exchange_capacity(per: int, nshards: int, pad: int = 16) -> int:
+    """Static per-(source, destination) off-diagonal block capacity: twice
+    the balanced share plus slack, clamped to the stripe length (at which
+    point overflow is impossible and the fallback branch is dead)."""
+    return int(min(per, 2 * (-(-per // nshards)) + pad))
+
+
+def _to_comparable(col: jax.Array) -> jax.Array:
+    """Key column -> dtype whose ``<``/``==`` reproduce ``lax.sort``'s key
+    order (floats via the canonicalizing ``f32_sort_key``)."""
+    if jnp.issubdtype(col.dtype, jnp.floating):
+        return segops.f32_sort_key(col)
+    if col.dtype == jnp.bool_:
+        return col.astype(jnp.int32)
+    return col
+
+
+def _pack_i32(col: jax.Array) -> jax.Array:
+    if col.dtype == jnp.int32:
+        return col
+    if col.dtype in (jnp.uint32, jnp.float32):
+        return jax.lax.bitcast_convert_type(col, jnp.int32)
+    if col.dtype == jnp.bool_:
+        return col.astype(jnp.int32)
+    raise TypeError(f"unsupported sort column dtype {col.dtype}")
+
+
+def _unpack_i32(col: jax.Array, dtype) -> jax.Array:
+    if dtype == jnp.int32:
+        return col
+    if dtype in (jnp.uint32, jnp.float32):
+        return jax.lax.bitcast_convert_type(col, dtype)
+    if dtype == jnp.bool_:
+        return col != 0
+    raise TypeError(f"unsupported sort column dtype {dtype}")
+
+
+def _lex_le(splitter_cols, elem_cols):
+    """[per, s-1] bool: splitter tuple <= element tuple, lexicographic over
+    the column list (most-significant first)."""
+    lt = None
+    eq = None
+    for tc, xc in zip(splitter_cols, elem_cols):
+        t = tc[None, :]
+        x = xc[:, None]
+        c_lt = t < x
+        c_eq = t == x
+        if lt is None:
+            lt, eq = c_lt, c_eq
+        else:
+            lt = lt | (eq & c_lt)
+            eq = eq & c_eq
+    return lt | eq
+
+
+def sample_sort_stripes(ctx, keys, payloads, *, oversample: int | None = None,
+                        with_stats: bool = False,
+                        _tie_rank: bool = True):
+    """Sort stripes of the global concatenation order; returns
+    ``(key_stripes, payload_stripes)`` of the globally stable-sorted order
+    (shard ``i`` holds sorted positions ``[i*per, (i+1)*per)``),
+    bit-identical to the gathered stable ``lax.sort``.
+
+    ``with_stats`` additionally returns a replicated ``fell_back`` scalar
+    (True when skew overflowed the static exchange capacity and the
+    gathered branch ran). ``_tie_rank=False`` drops the global-rank tie key
+    — only for the mutation-demo tests: equal keys then merge in
+    buffer order instead of stripe order and stability is lost.
+    """
+    axis, s = ctx.axis, ctx.nshards
+    assert axis is not None and keys, (axis, len(keys))
+    per = keys[0].shape[0]
+    n = per * s
+    m = len(keys)
+    idx = ctx.index()
+    grank = idx * per + jnp.arange(per, dtype=jnp.int32)
+
+    cmp_cols = [_to_comparable(k) for k in keys]
+    n_tie = 1 if _tie_rank else 0
+    # float/bool key columns lose bits in the comparable image -> originals
+    # ride as carried payloads; int columns come back from the keys.
+    carried_ix = [i for i, k in enumerate(keys)
+                  if cmp_cols[i].dtype != k.dtype]
+    carried = [keys[i] for i in carried_ix]
+    data_cols = carried + list(payloads)
+
+    # ---- 1. local sort by (cmp..., grank) --------------------------------
+    ops = cmp_cols + [grank] + data_cols
+    ops = jax.lax.sort(ops, num_keys=m + n_tie, is_stable=True)
+    cmp_s = list(ops[:m])
+    grank_s = ops[m]
+    data_s = list(ops[m + 1:])
+    sort_keys = cmp_s + ([grank_s] if _tie_rank else [])
+
+    # ---- 2. splitters from a gathered regular sample ---------------------
+    # oversampling 4x tightens bucket balance enough that the stripe
+    # rebalance stays within capacity on uniform data (measured: q = s
+    # overflows at mid sizes); sample traffic stays O(s^2 * q) scalars
+    q = oversample or max(1, min(per, 4 * s))
+    qpos = (jnp.arange(q, dtype=jnp.int32) * per) // q
+    sample = jnp.stack([_pack_i32(c[qpos]) for c in sort_keys], axis=-1)
+    sample = jax.lax.all_gather(sample, axis).reshape(s * q, -1)  # [s*q, mk]
+    samp_cols = [_unpack_i32(sample[:, j], k.dtype)
+                 for j, k in enumerate(sort_keys)]
+    samp_cols = jax.lax.sort(samp_cols, num_keys=len(samp_cols),
+                             is_stable=True)
+    spos = (jnp.arange(s - 1, dtype=jnp.int32) + 1) * q
+    splitters = [c[spos] for c in samp_cols]                       # [s-1]
+
+    # ---- 3. bucket by lexicographic splitter comparison ------------------
+    if s > 1:
+        bucket = jnp.sum(_lex_le(splitters, sort_keys), axis=1,
+                         dtype=jnp.int32)                          # [per]
+    else:
+        bucket = jnp.zeros((per,), jnp.int32)
+    # local data is sorted, so buckets are non-decreasing runs
+    pos_in_bucket = (jnp.arange(per, dtype=jnp.int32)
+                     - jnp.searchsorted(bucket, bucket,
+                                        side="left").astype(jnp.int32))
+
+    # ---- 4. counts -> offsets; capacity check (all replicated) -----------
+    counts = jax.ops.segment_sum(jnp.ones((per,), jnp.int32), bucket,
+                                 num_segments=s)                   # [s]
+    cnt_mat = jax.lax.all_gather(counts, axis)                     # [s, s]
+    btot = jnp.sum(cnt_mat, axis=0)                                # [s]
+    boff = jnp.cumsum(btot) - btot          # bucket global start   [s]
+    cap = exchange_capacity(per, s)
+    eye = jnp.eye(s, dtype=bool)
+    stripe_lo = jnp.arange(s, dtype=jnp.int32) * per
+    # rebalance per-pair counts: overlap of bucket i's global interval with
+    # stripe j — known before any data moves
+    lo2 = jnp.maximum(boff[:, None], stripe_lo[None, :])
+    hi2 = jnp.minimum((boff + btot)[:, None], (stripe_lo + per)[None, :])
+    c2_mat = jnp.maximum(hi2 - lo2, 0).astype(jnp.int32)           # [s, s]
+    fell_back = (jnp.any(jnp.where(eye, 0, cnt_mat) > cap)
+                 | jnp.any(jnp.where(eye, 0, c2_mat) > cap))
+
+    packed = jnp.stack([_pack_i32(c) for c in cmp_s + [grank_s] + data_s],
+                       axis=-1)                                    # [per, nc]
+    ncols = packed.shape[1]
+    # sentinel tuple that sorts after every real extended key: cmp columns
+    # at their dtype maximum (uint32 max bitcasts to int32 -1), grank at
+    # int32 max — real granks are < n, so even all-max real keys sort first
+    sent_row = jnp.asarray(
+        [-1 if c.dtype == jnp.uint32 else int(jnp.iinfo(jnp.int32).max)
+         for c in cmp_s] + [int(jnp.iinfo(jnp.int32).max)] * (ncols - m),
+        jnp.int32)
+
+    def _merge_sort(rows):
+        """Sort packed rows by (cmp..., grank) with original dtypes."""
+        cols = [_unpack_i32(rows[:, j], c.dtype)
+                for j, c in enumerate(cmp_s)]
+        cols += [rows[:, j] for j in range(m, ncols)]
+        out = jax.lax.sort(cols, num_keys=m + n_tie, is_stable=True)
+        return jnp.stack([_pack_i32(c) if j < m else c
+                          for j, c in enumerate(out)], axis=-1)
+
+    def _exchange(packed):
+        me = idx
+        keep = bucket == me
+        send_ok = ~keep & (pos_in_bucket < cap)
+        dest = jnp.where(send_ok, bucket * cap + pos_in_bucket, s * cap)
+        send = jnp.broadcast_to(sent_row, (s * cap + 1, ncols))
+        send = send.at[dest].set(packed, mode="drop")[:-1]
+        recv = jax.lax.all_to_all(send.reshape(s, cap, ncols), axis,
+                                  split_axis=0, concat_axis=0, tiled=True)
+        rv = ((jnp.arange(cap, dtype=jnp.int32)[None, :]
+               < cnt_mat[:, me][:, None])
+              & ~eye[:, me][:, None])                              # [s, cap]
+        kept = jnp.where(keep[:, None], packed, sent_row[None, :])
+        recv = jnp.where(rv.reshape(-1)[:, None],
+                         recv.reshape(s * cap, ncols), sent_row[None, :])
+        merged = _merge_sort(jnp.concatenate([kept, recv], axis=0))
+
+        # ---- 5. rebalance bucket boundaries to exact stripes -------------
+        bt_me = btot[me]
+        r = jnp.arange(per + s * cap, dtype=jnp.int32)
+        ok = r < bt_me
+        g = boff[me] + r                       # global sorted position
+        dj = jnp.clip(g // per, 0, s - 1)
+        keep2 = ok & (dj == me)
+        pos2 = g - jnp.maximum(dj * per, boff[me])  # rank in (me, dj) block
+        send2_ok = ok & (dj != me) & (pos2 < cap)
+        dest2 = jnp.where(send2_ok, dj * cap + pos2, s * cap)
+        send2 = jnp.broadcast_to(sent_row, (s * cap + 1, ncols))
+        send2 = send2.at[dest2].set(merged, mode="drop")[:-1]
+        recv2 = jax.lax.all_to_all(send2.reshape(s, cap, ncols), axis,
+                                   split_axis=0, concat_axis=0, tiled=True)
+        # scatter into the output stripe: kept rows land at g - me*per,
+        # received block i lands contiguously at its bucket/stripe overlap
+        out = jnp.zeros((per + 1, ncols), jnp.int32)
+        kpos = jnp.where(keep2, g - me * per, per)
+        out = out.at[kpos].set(merged, mode="drop")
+        rpos2 = (jnp.maximum(boff, me * per) - me * per)[:, None] \
+            + jnp.arange(cap, dtype=jnp.int32)[None, :]            # [s, cap]
+        rv2 = ((jnp.arange(cap, dtype=jnp.int32)[None, :]
+                < c2_mat[:, me][:, None]) & ~eye[:, me][:, None])
+        rpos2 = jnp.where(rv2, rpos2, per).reshape(-1)
+        out = out.at[rpos2].set(recv2.reshape(s * cap, ncols), mode="drop")
+        return out[:per]
+
+    def _gathered(packed):
+        full = jax.lax.all_gather(packed, axis).reshape(n, ncols)
+        full = _merge_sort(full)
+        return jax.lax.dynamic_slice_in_dim(full, idx * per, per, axis=0)
+
+    if s == 1:
+        out = packed
+        fell_back = jnp.asarray(False)
+    else:
+        out = jax.lax.cond(fell_back, _gathered, _exchange, packed)
+
+    # ---- unpack back into (keys, payloads) -------------------------------
+    out_keys = []
+    ci = iter(range(m + 1, m + 1 + len(carried)))
+    for i, k in enumerate(keys):
+        if i in carried_ix:
+            out_keys.append(_unpack_i32(out[:, next(ci)], k.dtype))
+        else:
+            out_keys.append(_unpack_i32(out[:, i], k.dtype))
+    base = m + 1 + len(carried)
+    out_pay = [_unpack_i32(out[:, base + j], p.dtype)
+               for j, p in enumerate(payloads)]
+    if with_stats:
+        return out_keys, out_pay, fell_back
+    return out_keys, out_pay

@@ -48,6 +48,11 @@ def main(argv=None):
     ap.add_argument("--single-coarsen", action="store_true",
                     help="keep coarsening single-device (refinement still "
                          "runs on the mesh)")
+    ap.add_argument("--compensated-psum", action="store_true",
+                    help="combine the coarsening eta / matching-sum0 float "
+                         "reductions with the Neumaier-compensated psum "
+                         "(O(dense) traffic, ~1 ulp; drops bit-exact parity "
+                         "with the single-device run)")
     ap.add_argument("--race-seed", type=int, default=0)
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
@@ -69,7 +74,8 @@ def main(argv=None):
     res = partition(hg, omega=args.omega, delta=args.delta, theta=args.theta,
                     plan=plan, race=not args.no_race,
                     race_seed=args.race_seed,
-                    dist_coarsen=not args.single_coarsen)
+                    dist_coarsen=not args.single_coarsen,
+                    compensated_psum=args.compensated_psum)
     out = dict(
         connectivity=res.connectivity, cut_net=res.cut_net,
         n_parts=res.n_parts, n_levels=res.n_levels,

@@ -15,11 +15,21 @@ be masked by the caller with sentinel keys that sort to the end.
 
 ``ShardCtx`` extends the same primitives across a mesh axis inside
 ``shard_map``: contiguous lane-striping for the pins/pairs-sized loops,
-``psum``-combined dense segment reductions (no data all-gathers), and
-cross-shard segmented-scan carries (``sharded_segmented_scan``). With
-``axis=None`` every helper degrades to the exact single-device computation,
-so the refinement pipeline in ``core/refine.py`` is written once and runs
-identically in both modes.
+``psum``-combined dense segment reductions (no data all-gathers),
+cross-shard segmented-scan carries (``sharded_segmented_scan``), and — the
+piece that used to be the one gathered compromise — a distributed stable
+multi-key sort. ``ShardCtx.sort_by`` runs the sample sort of
+``repro.dist.sort``: per-shard local ``lax.sort``, splitters from a gathered
+O(nshards^2 * oversample) regular sample (never the full key columns),
+static-shape ``all_to_all`` exchanges with counts psum'd/all-gathered into
+send/recv offsets, and a threaded global-rank tie key that makes the result
+bit-identical to the gathered stable ``lax.sort``. The stripe-boundary
+helpers (``edge_prev``/``edge_next``/``starts_from_sorted``/``cumsum``/
+``unstripe``) let consumers of the sorted stripes (segment starts, group
+closings, compactions) run stripe-local with scalar boundary exchanges.
+With ``axis=None`` every helper degrades to the exact single-device
+computation, so the coarsening/refinement pipelines are written once and
+run identically in both modes.
 """
 from __future__ import annotations
 
@@ -45,6 +55,12 @@ class ShardCtx:
 
     axis: str | None = None
     nshards: int = 1
+    # opt-in: float reductions that would gather lane columns for bit-exact
+    # stripe-order accumulation (eta, matching sum0) may instead combine
+    # per-shard dense partials with `psum_compensated` (Neumaier two-sum in
+    # shard order): O(dense) traffic, ~1 ulp of the true sum, but not
+    # bit-identical to the single-device order.
+    compensated: bool = False
 
     def index(self) -> jax.Array:
         if self.axis is None:
@@ -124,14 +140,151 @@ class ShardCtx:
                                     tiled=True)
 
     def gather(self, x: jax.Array) -> jax.Array:
-        """Concatenate all shards' stripes (in shard order) — used only for
-        the sort keys/payloads of the events pipeline; see
-        ``core.refine.events_validity`` for why sort is the one gathered
-        stage."""
+        """Concatenate all shards' stripes (in shard order). Since the
+        distributed sample sort landed, no sort call site gathers its key
+        columns anymore; this remains for the bit-exact float reductions
+        (eta / matching sum0 lane columns gathered in stripe order — see
+        ``psum_compensated`` for the O(dense) alternative) and for tests."""
         if self.axis is None:
             return x
         g = jax.lax.all_gather(x, self.axis)
         return g.reshape((-1,) + g.shape[2:])
+
+    def unstripe(self, x: jax.Array) -> jax.Array:
+        """Replicate a stripe-laid-out array: each shard scatters its stripe
+        into a zeros-filled full-length array at its offset and the disjoint
+        partials psum (every lane has exactly one contributor). The
+        psum-combine dual of ``gather`` for sorted / compacted results whose
+        consumer needs the whole array. Floats travel as bitcast int32 so
+        the combine is bit-preserving (a float psum would turn -0.0 into
+        +0.0 and may re-sign NaNs); bools as int32."""
+        if self.axis is None:
+            return x
+        per = x.shape[0]
+        if x.dtype == jnp.bool_:
+            xi = x.astype(jnp.int32)
+        elif x.dtype in (jnp.float32, jnp.uint32):
+            xi = jax.lax.bitcast_convert_type(x, jnp.int32)
+        else:
+            xi = x
+        full = jnp.zeros((per * self.nshards,) + x.shape[1:], xi.dtype)
+        full = jax.lax.dynamic_update_slice_in_dim(
+            full, xi, self.index() * per, 0)
+        full = jax.lax.psum(full, self.axis)
+        if x.dtype == jnp.bool_:
+            return full != 0
+        if x.dtype in (jnp.float32, jnp.uint32):
+            return jax.lax.bitcast_convert_type(full, x.dtype)
+        return full
+
+    def edge_prev(self, x: jax.Array, fill) -> jax.Array:
+        """Previous element's value in global stripe order: ``out[i] =
+        x[i-1]`` within the stripe, ``out[0]`` = the previous shard's last
+        element (``fill`` on the globally first shard). The boundary
+        exchange is one scalar all-gather — never the data."""
+        first = jnp.full((1,), fill, x.dtype)
+        if self.axis is None:
+            return jnp.concatenate([first, x[:-1]])
+        lasts = jax.lax.all_gather(x[-1], self.axis)   # [nshards]
+        i = self.index()
+        prev = jnp.where(i > 0, lasts[jnp.maximum(i - 1, 0)], first[0])
+        return jnp.concatenate([prev[None], x[:-1]])
+
+    def edge_next(self, x: jax.Array, fill) -> jax.Array:
+        """Next element's value in global stripe order (mirror of
+        ``edge_prev``): ``out[-1]`` = the next shard's first element
+        (``fill`` on the globally last shard)."""
+        last = jnp.full((1,), fill, x.dtype)
+        if self.axis is None:
+            return jnp.concatenate([x[1:], last])
+        firsts = jax.lax.all_gather(x[0], self.axis)   # [nshards]
+        i = self.index()
+        nxt = jnp.where(i < self.nshards - 1,
+                        firsts[jnp.minimum(i + 1, self.nshards - 1)], last[0])
+        return jnp.concatenate([x[1:], nxt[None]])
+
+    def starts_from_sorted(self, keys: Sequence[jax.Array]) -> jax.Array:
+        """``segment_starts_from_sorted`` over stripe-laid-out sorted key
+        columns: each stripe's first element compares against the previous
+        stripe's last (scalar boundary exchange), and the globally first
+        element is always a start."""
+        if self.axis is None:
+            return segment_starts_from_sorted(keys)
+        n = keys[0].shape[0]
+        start = jnp.zeros((n,), bool).at[0].set(self.index() == 0)
+        for k in keys:
+            start = start | (k != self.edge_prev(k, k[0]))
+        return start
+
+    def cumsum(self, x: jax.Array) -> jax.Array:
+        """Cross-shard inclusive cumsum over stripe layout (one-segment
+        ``segmented_scan``); dtype-preserving, carries exchange two scalars
+        per shard."""
+        out, _ = self.segmented_scan(x, jnp.zeros(x.shape, bool))
+        return out
+
+    def sort_by(self, keys: Sequence[jax.Array],
+                payloads: Sequence[jax.Array], *,
+                striped_in: bool = False, striped_out: bool = False):
+        """Stable lexicographic multi-key sort across the shard axis — the
+        distributed sample sort of ``repro.dist.sort``, bit-identical to
+        gathering the columns and running the stable ``lax.sort`` (a
+        threaded global-rank tie key makes every extended key unique, so
+        the bucketed order *is* the stable order).
+
+        ``striped_in``: columns are this shard's stripe of the global
+        (concatenation-order) columns; otherwise they are replicated
+        full-length columns, striped internally. ``striped_out``: return
+        this shard's stripe of the sorted order; otherwise the full sorted
+        columns are rebuilt on every shard via ``unstripe`` (psum of
+        disjoint stripes — the only all-to-every traffic, and only when a
+        replicated consumer asks for it). Only O(nshards^2 * oversample)
+        splitter-sample keys are ever gathered; payload data moves through
+        static-shape all_to_all exchanges sized O(len/nshards).
+
+        With ``axis=None`` (or replicated columns whose length does not
+        tile the shard count) this degrades to the exact single-device
+        ``sort_by``."""
+        keys = list(keys)
+        payloads = list(payloads)
+        if self.axis is None:
+            return sort_by(keys, payloads)
+        from repro.dist import sort as dist_sort
+        if not striped_in:
+            length = keys[0].shape[0]
+            if length % self.nshards or length < self.nshards:
+                return sort_by(keys, payloads)  # replicated, still exact
+            keys = [self.stripe(k) for k in keys]
+            payloads = [self.stripe(p) for p in payloads]
+        ks, ps = dist_sort.sample_sort_stripes(self, keys, payloads)
+        if not striped_out:
+            ks = [self.unstripe(k) for k in ks]
+            ps = [self.unstripe(p) for p in ps]
+        return tuple(ks), tuple(ps)
+
+    def psum_compensated(self, x: jax.Array) -> jax.Array:
+        """Neumaier-compensated cross-shard float sum of per-shard dense
+        partials, folded in shard order. O(dense) traffic like ``psum``
+        (vs the O(lanes) stripe-order column gather that bit-exact float
+        reductions use) and deterministic for a fixed mesh, but NOT
+        bit-identical to the single-device lane-order accumulation — the
+        compensation bounds the error to ~1 ulp of the true sum instead.
+        Opt-in via ``ShardCtx(compensated=True)`` for the eta / matching
+        sum0 reductions when exact single-device parity is not required."""
+        if self.axis is None:
+            return x
+        parts = jax.lax.all_gather(x.astype(jnp.float32), self.axis)
+
+        def step(carry, v):
+            s, c = carry
+            t = s + v
+            c = c + jnp.where(jnp.abs(s) >= jnp.abs(v),
+                              (s - t) + v, (v - t) + s)
+            return (t, c), None
+
+        zero = jnp.zeros(x.shape, jnp.float32)
+        (tot, comp), _ = jax.lax.scan(step, (zero, zero), parts)
+        return tot + comp
 
     def stripe(self, x: jax.Array) -> jax.Array:
         """This shard's contiguous stripe of a replicated array whose length
@@ -166,8 +319,22 @@ def segment_min(data: jax.Array, seg: jax.Array, num: int) -> jax.Array:
 
 
 def f32_sort_key(x: jax.Array) -> jax.Array:
-    """Monotonic float32 -> uint32 mapping (total order, NaN-free inputs)."""
-    b = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    """Monotone float32 -> uint32 key reproducing ``lax.sort``'s float key
+    order *including its canonicalization*: -0.0 and +0.0 map to the same
+    key, and every NaN (any sign or payload) maps to one canonical key that
+    sorts after +inf — exactly ``lax``'s ``_canonicalize_float_for_sort``
+    contract. Uint32 ``<``/``==`` on these keys therefore agree bit-for-bit
+    with a float ``lax.sort`` (ties fall through to later key columns /
+    stability), which is what lets the distributed sample sort
+    (``repro.dist.sort``) bucket float key columns by splitter comparison
+    without ever diverging from the gathered sort. The mapping is
+    deliberately non-injective on the canonicalized classes, so callers that
+    need the original float bits back must thread the column as a payload.
+    """
+    x = x.astype(jnp.float32)
+    x = jnp.where(x == 0.0, jnp.float32(0.0), x)      # -0.0 == +0.0
+    x = jnp.where(jnp.isnan(x), jnp.float32(jnp.nan), x)  # one canonical NaN
+    b = jax.lax.bitcast_convert_type(x, jnp.uint32)
     mask = jnp.where(b >> 31 != 0, jnp.uint32(0xFFFFFFFF), jnp.uint32(0x80000000))
     return b ^ mask
 
@@ -297,7 +464,13 @@ def compact_flags(flags: jax.Array) -> tuple[jax.Array, jax.Array]:
 def scatter_compact(
     data: jax.Array, flags: jax.Array, out_size: int, fill
 ) -> tuple[jax.Array, jax.Array]:
-    """Stream-compact ``data[flags]`` into a fresh array of ``out_size``."""
+    """Stream-compact ``data[flags]`` into a fresh array of ``out_size``.
+
+    Single-device compaction primitive (kept as part of the CUB-analogue
+    surface). The sharded pipelines compact differently — global slots from
+    a ``ShardCtx.cumsum`` carry, then a psum of disjoint dense scatters, as
+    in ``core.hypergraph.build_neighbors`` — so that the dense result, not
+    the lanes, travels."""
     pos, cnt = compact_flags(flags)
     out = jnp.full((out_size,) + data.shape[1:], fill, dtype=data.dtype)
     idx = jnp.where(flags, pos, out_size)  # out-of-range drops

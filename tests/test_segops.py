@@ -102,3 +102,56 @@ def test_pair_noise_symmetric_and_bounded():
     assert (n1 >= 0).all() and (n1 < 1.0).all()
     jn = pair_noise(jnp.asarray(a), jnp.asarray(b), 1.0)
     np.testing.assert_allclose(np.asarray(jn), n1, rtol=1e-6)
+
+
+def test_f32_sort_key_matches_lax_sort_total_order():
+    """The uint32 key order must agree with `lax.sort`'s float key order —
+    including its canonicalization: -0.0 == +0.0, and every NaN (any sign /
+    payload) one equal class after +inf. These keys seed the distributed
+    sample sort's splitters, so any disagreement would diverge the
+    distributed and gathered sorts."""
+    import jax
+
+    x = np.array([1.0, -0.0, 0.0, np.nan, -np.nan, -np.inf, np.inf,
+                  -1.0, 2**-126, -(2**-126), 3.3e38, -3.3e38], np.float32)
+    # payload-threaded lax.sort = ground truth stable order
+    (_, ), (perm,) = segops.sort_by(
+        [jnp.asarray(x)], [jnp.arange(len(x), dtype=jnp.int32)])
+    key = np.asarray(segops.f32_sort_key(jnp.asarray(x)))
+    perm_key = np.lexsort((np.arange(len(x)), key))
+    np.testing.assert_array_equal(np.asarray(perm), perm_key)
+    # explicit edge classes
+    k = lambda v: int(np.asarray(segops.f32_sort_key(jnp.float32(v))))
+    assert k(-0.0) == k(0.0)
+    nan_alt = np.array([0x7FC00001, 0xFFC00000], np.uint32).view(np.float32)
+    assert k(np.nan) == k(nan_alt[0]) == k(nan_alt[1])  # one NaN class
+    assert k(np.nan) > k(np.inf)                        # NaNs sort last
+    assert k(-np.inf) < k(-1.0) < k(-0.0) < k(2**-126) < k(np.inf)
+    del jax
+
+
+def test_shardctx_boundary_helpers_single_device_degenerate():
+    """edge_prev / edge_next / starts_from_sorted / cumsum / unstripe with
+    axis=None must equal their whole-array definitions (the sharded events
+    and contraction pipelines rely on this degenerate case)."""
+    ctx = segops.ShardCtx()
+    x = jnp.asarray([4, 4, 7, 7, 7, 9], jnp.int32)
+    assert ctx.edge_prev(x, -1).tolist() == [-1, 4, 4, 7, 7, 7]
+    assert ctx.edge_next(x, -1).tolist() == [4, 7, 7, 7, 9, -1]
+    assert (ctx.starts_from_sorted([x]).tolist()
+            == segops.segment_starts_from_sorted([x]).tolist())
+    assert ctx.cumsum(x).tolist() == np.cumsum(x).tolist()
+    assert ctx.unstripe(x).tolist() == x.tolist()
+    np.testing.assert_array_equal(np.asarray(ctx.psum_compensated(x)),
+                                  np.asarray(x))
+
+
+def test_shardctx_sort_by_single_device_matches_sort_by():
+    rng = np.random.default_rng(7)
+    k1 = jnp.asarray(rng.integers(0, 5, 33).astype(np.int32))
+    kf = jnp.asarray(rng.normal(size=33).astype(np.float32))
+    p = jnp.arange(33, dtype=jnp.int32)
+    gk, gp = segops.ShardCtx().sort_by([k1, kf], [p])
+    ek, ep = segops.sort_by([k1, kf], [p])
+    for g, e in zip(list(gk) + list(gp), list(ek) + list(ep)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(e))
