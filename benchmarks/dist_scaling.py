@@ -4,15 +4,18 @@ parallelism claim, Secs. V-VI, measured on forced host devices).
 Each device count runs in a fresh subprocess (XLA device topology is fixed
 at backend init), partitions the same SNN hypergraph through
 `dist.partition` with a (1, n)-mesh Plan — all devices shard the pins/pairs
-pipelines of both coarsening and refinement — and reports the second run's
-per-phase wall-times (first run pays compile): a coarsen-phase column, a
-refine-phase column, and a `sort_s` column (an events-scale distributed
-sample sort in isolation, with the bytes/shard the legacy gathered sort
-would have moved vs the splitter sample that travels now) per device
-count. On this CPU container the "devices"
-are host threads, so the numbers chart overhead/scaling shape rather than
-real speedup; on an accelerator mesh the same harness measures the real
-thing.
+pipelines of both coarsening and refinement, and the graph *storage* is
+memory-sharded (`shard_graph=True`, `dist.graph.ShardedHypergraph`) — and
+reports the second run's per-phase wall-times (first run pays compile): a
+coarsen-phase column, a refine-phase column, a `sort_s` column (an
+events-scale distributed sample sort in isolation, with the bytes/shard the
+legacy gathered sort would have moved vs the splitter sample that travels
+now), and a `graph_B` column (per-device live bytes of the pins-sized
+storage arrays — sharded, scaling ~1/devices — next to `graph_repl_B`, the
+bytes a replicated copy pins on every device) per device count. On this CPU
+container the "devices" are host threads, so the numbers chart
+overhead/scaling shape rather than real speedup; on an accelerator mesh the
+same harness measures the real thing.
 
   PYTHONPATH=src python -m benchmarks.dist_scaling
   PYTHONPATH=src python -m benchmarks.run --only dist
@@ -49,7 +52,18 @@ _CHILD = textwrap.dedent("""
     res = None
     for _ in range(2):   # second run: jit cache warm per caps signature
         res = partition(hg, omega=24, delta=96, theta=4, plan=plan,
-                        race=False)
+                        race=False, shard_graph=True)
+
+    # per-device live bytes of the pins-sized storage arrays: sharded
+    # stripes (the new layout) vs the replicated copy every device used to
+    # pin — the ~1/devices memory claim of the sharded storage
+    from repro.dist import graph as dist_graph
+    caps0 = Caps.for_host(hg)
+    g = dist_graph.sharded_from_host(hg, caps0, plan)
+    graph_B = g.pins_bytes_per_device()
+    graph_repl_B = sum(
+        np.dtype(dt).itemsize * caps0.p
+        for dt in (np.int32, np.int32, np.bool_))  # pins/edges/is_in
 
     # events-scale distributed sort in isolation (PR 4): wall time plus the
     # bytes/shard the legacy gathered sort would have all-gathered vs the
@@ -84,6 +98,8 @@ _CHILD = textwrap.dedent("""
                           sort_s=sort_s,
                           sort_gather_B=int(L) * 4 * 4,
                           sort_splitter_B=n_dev * q * 4 * 4,
+                          graph_B=int(graph_B),
+                          graph_repl_B=int(graph_repl_B),
                           connectivity=res.connectivity,
                           n_parts=res.n_parts)))
 """)
@@ -122,6 +138,7 @@ def run() -> list[str]:
             f"sort_s={m['sort_s']:.4f} total_s={m['total_s']:.3f} "
             f"sort_gather_B={m['sort_gather_B']} "
             f"sort_splitter_B={m['sort_splitter_B']} "
+            f"graph_B={m['graph_B']} graph_repl_B={m['graph_repl_B']} "
             f"conn={m['connectivity']:.0f} {rel}"))
     return out
 

@@ -74,6 +74,15 @@ class Proposals:
     eta: jax.Array          # [NBcap] histogram values (for tests/ablation)
     inter: jax.Array        # [NBcap]
     valid_slot: jax.Array   # [NBcap]
+    # live-vs-capacity diagnostics for the drivers' host-side overflow
+    # audit (`hypergraph.check_expansion_caps`): the true ordered-pin-pair
+    # expansion size and the deduplicated neighborhood entry count — the
+    # device pipelines silently drop out-of-capacity lanes, so exceeding
+    # `caps.pairs` / `caps.nbrs` must raise host-side, not mis-partition.
+    n_pairs_live: jax.Array = dataclasses.field(
+        default_factory=lambda: jnp.int32(0))  # scalar
+    n_nbr_entries: jax.Array = dataclasses.field(
+        default_factory=lambda: jnp.int32(0))  # scalar
 
 
 def score_slots(d: DeviceHypergraph, nbrs: Neighborhoods,
@@ -219,12 +228,14 @@ def coarsen_step_impl(d: DeviceHypergraph, caps: Caps, params: CoarsenParams,
     from repro.core.hypergraph import build_neighbors, build_pairs
 
     pidx, pidx_ok = ctx.lanes(caps.pairs)
-    pairs = build_pairs(d, caps, idx=pidx, idx_ok=pidx_ok)
+    pairs = build_pairs(d, caps, idx=pidx, idx_ok=pidx_ok, ctx=ctx)
     nbrs = build_neighbors(pairs, d, caps, ctx)
     props = propose(d, nbrs, pairs, caps, params, ctx)
     match = run_matching_rounds(props, d, caps, params, ctx)
     match = pair_isolated(match, props, d, caps, params)
     n_pairs = jnp.sum((match >= 0) & (jnp.arange(caps.n) < d.n_nodes)) // 2
+    props = dataclasses.replace(props, n_pairs_live=pairs.n_pairs,
+                                n_nbr_entries=nbrs.n_entries)
     return match, n_pairs, props
 
 

@@ -70,11 +70,10 @@ def contract_impl(d: DeviceHypergraph, match: jax.Array, caps: Caps,
     # ---- coarse edge pins: map through gamma, dedup, src-first repack ----
     # key construction on this shard's contiguous pin-lane stripe
     t, t_in = ctx.lanes(caps.p)
-    tp = jnp.clip(t, 0, caps.p - 1)
     pin_live = t_in & (t < d.n_pins)
     e_of = ctx.rows(d.edge_off, t, caps.p, caps.e)
     e_safe = jnp.clip(e_of, 0, caps.e - 1)
-    pin = jnp.clip(d.edge_pins[tp], 0, caps.n - 1)
+    pin = jnp.clip(ctx.gread(d.edge_pins, t, pin_live, 0), 0, caps.n - 1)
     pprime = jnp.where(pin_live, gamma[pin], IMAX)
     rel = t - d.edge_off[e_safe]
     is_dst = pin_live & (rel >= d.edge_nsrc[e_safe])
@@ -112,11 +111,22 @@ def contract_impl(d: DeviceHypergraph, match: jax.Array, caps: Caps,
     se_safe = jnp.clip(se_l, 0, caps.e - 1)
     pos = jnp.where(kept_src_l, edge_off_new[se_safe] + src_rank - 1,
                     edge_off_new[se_safe] + nsrc_new[se_safe] + dst_rank - 1)
-    pos = jnp.where(keep_l, pos, caps.p).astype(jnp.int32)
-    pins_dense = ctx.psum(jnp.zeros((caps.p + 1,), jnp.int32)
-                          .at[pos].add(jnp.where(keep_l, sp_l, 0))[: caps.p])
-    slot = jnp.arange(caps.p, dtype=jnp.int32)
-    pins_new = jnp.where(slot < n_pins_new, pins_dense, NSENT)
+    striped = ctx.graph_striped and ctx.axis is not None
+    if striped:
+        # memory-sharded storage: reduce-scatter the packed pins so each
+        # shard keeps exactly its lane stripe of the coarse graph — the
+        # dense pins column never materializes replicated
+        st = t.shape[0] * ctx.nshards
+        pos = jnp.where(keep_l, pos, st).astype(jnp.int32)
+        dense = (jnp.zeros((st + 1,), jnp.int32)
+                 .at[pos].add(jnp.where(keep_l, sp_l, 0))[: st])
+        pins_new = jnp.where(t < n_pins_new, ctx.psum_stripe(dense), NSENT)
+    else:
+        pos = jnp.where(keep_l, pos, caps.p).astype(jnp.int32)
+        pins_dense = ctx.psum(jnp.zeros((caps.p + 1,), jnp.int32)
+                              .at[pos].add(jnp.where(keep_l, sp_l, 0))[: caps.p])
+        slot = jnp.arange(caps.p, dtype=jnp.int32)
+        pins_new = jnp.where(slot < n_pins_new, pins_dense, NSENT)
 
     # ---- incidence rebuild (inbound first) -------------------------------
     t2_live = t_in & (t < n_pins_new)
@@ -124,18 +134,24 @@ def contract_impl(d: DeviceHypergraph, match: jax.Array, caps: Caps,
     e2_safe = jnp.clip(e2, 0, caps.e - 1)
     rel2 = t - edge_off_new[e2_safe]
     isdst2 = t2_live & (rel2 >= nsrc_new[e2_safe])
-    node2 = ctx.take(pins_new, t, t2_live, IMAX)
+    node2 = ctx.gread(pins_new, t, t2_live, IMAX)
     inkey = jnp.where(isdst2, 0, 1)  # inbound edges first
     key_e = jnp.where(t2_live, e2, IMAX)
     (sn2_l, sk2_l, se2_l), (sin2_l,) = ctx.sort_by(
         [node2, inkey, key_e], [isdst2.astype(jnp.int32)],
         striped_in=True, striped_out=True)
-    # the replicated incidence arrays rebuild from the sorted stripes by
-    # psum of disjoint stripe scatters (`unstripe`) — integer, exact
-    node_edges_new = ctx.unstripe(
-        jnp.where(sn2_l != IMAX, se2_l, NSENT))[: caps.p]
-    node_is_in_new = ctx.unstripe(
-        (sin2_l == 1) & (sn2_l != IMAX))[: caps.p]
+    # incidence rebuild from the sorted stripes: with memory-sharded
+    # storage the sorted stripes already ARE the new incidence layout, so
+    # each shard simply keeps its stripe; otherwise the replicated arrays
+    # rebuild by psum of disjoint stripe scatters (`unstripe`) — integer,
+    # exact either way
+    ne_stripe = jnp.where(sn2_l != IMAX, se2_l, NSENT)
+    ni_stripe = (sin2_l == 1) & (sn2_l != IMAX)
+    if striped:
+        node_edges_new, node_is_in_new = ne_stripe, ni_stripe
+    else:
+        node_edges_new = ctx.unstripe(ne_stripe)[: caps.p]
+        node_is_in_new = ctx.unstripe(ni_stripe)[: caps.p]
     segn = jnp.where(sn2_l != IMAX, sn2_l, caps.n)
     counts_n = ctx.psum(jax.ops.segment_sum(
         jnp.ones(sn2_l.shape, jnp.int32), segn,

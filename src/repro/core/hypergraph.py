@@ -23,6 +23,43 @@ import numpy as np
 NSENT = np.int32(2**31 - 1)  # sentinel id for padding lanes
 
 
+class CapacityError(ValueError):
+    """A static device capacity was exceeded by the live data.
+
+    The capacity-padded device pipelines clip/drop out-of-capacity lanes
+    (XLA needs static shapes), so an undersized ``Caps`` would otherwise
+    corrupt results *silently* — e.g. a truncated neighborhood CSR simply
+    drops candidate pairs. The drivers therefore audit the live counts
+    host-side every level (see ``check_expansion_caps``) and raise this
+    instead of mis-partitioning."""
+
+
+def check_expansion_caps(caps: "Caps", n_pairs_live, n_nbr_entries=None):
+    """Host-side overflow audit for one level's pair/neighborhood expansion.
+
+    ``n_pairs_live`` is the *true* ordered-pin-pair count (``build_pairs``
+    derives it from ``edge_off`` alone, so it is exact even when the lane
+    expansion was truncated); ``n_nbr_entries`` the deduplicated
+    neighborhood entry count from ``build_neighbors`` (exact only while the
+    pair expansion itself fit — hence pairs are checked first). Either may
+    be a device scalar; syncing them here is the per-level host round-trip
+    the drivers already pay for the ``n_pairs`` stop check."""
+    pl = int(n_pairs_live)
+    if pl > caps.pairs:
+        raise CapacityError(
+            f"pair-expansion overflow: {pl} live ordered pin pairs exceed "
+            f"Caps.pairs={caps.pairs}; lanes past capacity were dropped. "
+            f"Raise pair_cap (Caps.for_host computes the exact bound by "
+            f"default).")
+    if n_nbr_entries is not None:
+        nl = int(n_nbr_entries)
+        if nl > caps.nbrs:
+            raise CapacityError(
+                f"neighborhood overflow: {nl} deduplicated (node, neighbor) "
+                f"entries exceed Caps.nbrs={caps.nbrs}; the compacted CSR "
+                f"would have been truncated. Raise nbr_cap.")
+
+
 # --------------------------------------------------------------------------
 # Host container
 # --------------------------------------------------------------------------
@@ -177,33 +214,47 @@ class DeviceHypergraph:
         return self.edge_pins.shape[0]
 
 
-def device_from_host(hg: HostHypergraph, caps: Caps) -> DeviceHypergraph:
+def packed_host_arrays(hg: HostHypergraph, caps: Caps,
+                       pcap: int | None = None) -> dict:
+    """Capacity-padded numpy staging arrays for a device hypergraph.
+
+    ``pcap`` overrides the padded length of the three pins-sized arrays
+    (``edge_pins``/``node_edges``/``node_is_in``) — ``dist.graph`` pads them
+    to the shard-stripe total (``ceil(caps.p / nshards) * nshards``) so the
+    stripes tile the mesh's model axis; the extra lanes carry the same
+    sentinels as ordinary capacity padding."""
     node_off, node_edges, node_is_in, node_nin = hg.incidence()
     N, E, P = hg.n_nodes, hg.n_edges, hg.n_pins
+    pcap = caps.p if pcap is None else pcap
 
     def pad(a, cap, fill, dtype):
         out = np.full((cap,), fill, dtype=dtype)
         out[: len(a)] = a
-        return jnp.asarray(out)
+        return out
 
     eo = np.full((caps.e + 1,), P, np.int32)
     eo[: E + 1] = hg.edge_off
     no = np.full((caps.n + 1,), P, np.int32)
     no[: N + 1] = node_off
-    return DeviceHypergraph(
-        edge_off=jnp.asarray(eo),
-        edge_pins=pad(hg.edge_pins, caps.p, NSENT, np.int32),
+    return dict(
+        edge_off=eo,
+        edge_pins=pad(hg.edge_pins, pcap, NSENT, np.int32),
         edge_nsrc=pad(hg.edge_nsrc, caps.e, 0, np.int32),
         edge_w=pad(hg.edge_w, caps.e, 0.0, np.float32),
-        node_off=jnp.asarray(no),
-        node_edges=pad(node_edges, caps.p, NSENT, np.int32),
-        node_is_in=pad(node_is_in, caps.p, False, bool),
+        node_off=no,
+        node_edges=pad(node_edges, pcap, NSENT, np.int32),
+        node_is_in=pad(node_is_in, pcap, False, bool),
         node_nin=pad(node_nin, caps.n, 0, np.int32),
         node_size=pad(np.ones(N, np.int32), caps.n, 0, np.int32),
-        n_nodes=jnp.int32(N),
-        n_edges=jnp.int32(E),
-        n_pins=jnp.int32(P),
+        n_nodes=np.int32(N),
+        n_edges=np.int32(E),
+        n_pins=np.int32(P),
     )
+
+
+def device_from_host(hg: HostHypergraph, caps: Caps) -> DeviceHypergraph:
+    arrays = packed_host_arrays(hg, caps)
+    return DeviceHypergraph(**{k: jnp.asarray(v) for k, v in arrays.items()})
 
 
 def host_from_device(d: DeviceHypergraph) -> HostHypergraph:
@@ -247,9 +298,23 @@ class PairExpansion:
 
 def build_pairs(d: DeviceHypergraph, caps: Caps,
                 idx: jax.Array | None = None,
-                idx_ok: jax.Array | None = None) -> PairExpansion:
+                idx_ok: jax.Array | None = None,
+                ctx=None) -> PairExpansion:
     """``idx``/``idx_ok`` (from ``ShardCtx.lanes(caps.pairs)``) restrict the
-    expansion to one shard's contiguous lane stripe; default is all lanes."""
+    expansion to one shard's contiguous lane stripe; default is all lanes.
+
+    ``ctx`` (a ``segops.ShardCtx``) matters only for memory-sharded graph
+    storage (``ctx.graph_striped``): the expansion joins two *arbitrary*
+    pin slots per pair lane (``edge_pins[slot_n]`` / ``edge_pins[slot_m]``)
+    — the one access pattern lane striping cannot serve — so the pins
+    column is transiently rebuilt full-length via ``ctx.gfull`` for the
+    duration of the expansion (O(pins) live, freed after; the persistent
+    storage stays striped — see ``dist.graph``)."""
+    from repro.utils import segops
+
+    if ctx is None:
+        ctx = segops.ShardCtx()
+    edge_pins = ctx.gfull(d.edge_pins)
     L = caps.pairs
     ecap = d.ecap
     card = (d.edge_off[1:] - d.edge_off[:-1]).astype(jnp.int32)  # [Ecap]
@@ -275,8 +340,8 @@ def build_pairs(d: DeviceHypergraph, caps: Caps,
     slot_n = base + i
     slot_m = base + j
     safe = lambda s: jnp.clip(s, 0, caps.p - 1)
-    n = jnp.where(valid, d.edge_pins[safe(slot_n)], NSENT)
-    m = jnp.where(valid, d.edge_pins[safe(slot_m)], NSENT)
+    n = jnp.where(valid, edge_pins[safe(slot_n)], NSENT)
+    m = jnp.where(valid, edge_pins[safe(slot_m)], NSENT)
     nsrc = d.edge_nsrc[e]
     both_dst = valid & (i >= nsrc) & (j >= nsrc)
     wn = jnp.where(valid, d.edge_w[e] / jnp.maximum(card[e], 1), 0.0)
@@ -343,6 +408,31 @@ def build_neighbors(pairs: PairExpansion, d: DeviceHypergraph, caps: Caps,
     return Neighborhoods(off=off, ids=ids, n_entries=n_entries)
 
 
+def host_pair_count(hg: HostHypergraph) -> int:
+    """Exact (int64) ordered-pin-pair expansion size on host. The drivers
+    audit this against ``Caps.pairs`` *before* any device work: pair totals
+    are monotone non-increasing under coarsening (coarse pins dedup — see
+    ``Caps``), so once level 0 fits, every coarser level's count is bounded
+    by ``caps.pairs < 2**31`` and the per-level int32 device counts
+    (``device_pair_count``, ``build_pairs``'s cumsum) are exact — no wrap
+    can slip an overflow past the audit."""
+    card = np.diff(hg.edge_off).astype(np.int64)
+    return int((card * np.maximum(card - 1, 0)).sum())
+
+
+@jax.jit
+def device_pair_count(edge_off: jax.Array) -> jax.Array:
+    """Live ordered-pin-pair expansion size ``sum_e |e|^2 - |e|`` computed
+    on device from the (capacity-padded) offsets — dead edges beyond
+    ``n_edges`` have zero cardinality by the padding convention, so no live
+    mask is needed. int32, exact only while the total stays below 2**31 —
+    guaranteed by the drivers' upfront ``host_pair_count`` audit plus pair
+    monotonicity under coarsening (this is a per-level defense-in-depth
+    recheck, not the primary overflow guard)."""
+    card = (edge_off[1:] - edge_off[:-1]).astype(jnp.int32)
+    return jnp.sum(card * jnp.maximum(card - 1, 0))
+
+
 def shrink_device(d: DeviceHypergraph, caps: Caps) -> tuple[DeviceHypergraph, Caps]:
     """Perf iteration P1 (EXPERIMENTS.md §Perf): re-bucket capacities to the
     next power of two above the live sizes between coarsening levels.
@@ -352,19 +442,21 @@ def shrink_device(d: DeviceHypergraph, caps: Caps) -> tuple[DeviceHypergraph, Ca
     a handful of extra compilations (one per pow2 bucket, amortized across
     levels) for geometric work decay. Edge capacity never shrinks (edge ids
     persist across levels, paper Sec. V-E).
+
+    The live pair count is reduced on device (``device_pair_count``) and
+    read back in the same ``device_get`` as the node/pin scalars — one
+    host sync of three scalars per bucketed level, replacing the previous
+    blocking O(E) ``edge_off`` readback.
     """
     import math as _math
-    n_live = int(d.n_nodes)
-    p_live = int(d.n_pins)
+    n_live, p_live, pair_live = (int(v) for v in jax.device_get(
+        [d.n_nodes, d.n_pins, device_pair_count(d.edge_off)]))
     new_n = 1 << max(0, _math.ceil(_math.log2(max(n_live, 1))))
     new_p = 1 << max(0, _math.ceil(_math.log2(max(p_live, 1))))
     if new_n >= caps.n and new_p >= caps.p:
         return d, caps
     new_n = min(new_n, caps.n)
     new_p = min(new_p, caps.p)
-    off_host = np.asarray(d.edge_off, dtype=np.int64)
-    card_h = off_host[1:] - off_host[:-1]
-    pair_live = int((card_h * np.maximum(card_h - 1, 0)).sum())
     new_pairs = min(caps.pairs,
                     1 << max(0, _math.ceil(_math.log2(max(pair_live, 1)))))
     new_nbrs = min(caps.nbrs, new_pairs)

@@ -16,13 +16,16 @@ import dataclasses
 import math
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import metrics
 from repro.core.coarsen import CoarsenParams
-from repro.core.hypergraph import (Caps, HostHypergraph, device_from_host,
-                                   host_from_device)
+from repro.core.hypergraph import (Caps, HostHypergraph,
+                                   check_expansion_caps, device_from_host,
+                                   device_pair_count, host_from_device,
+                                   host_pair_count)
 from repro.core.partitioner import (PartitionResult, _next_pow2,
                                     make_coarsen_fns, make_refine_fn)
 from repro.core.refine import RefineParams
@@ -68,19 +71,31 @@ def partition_kway(hg: HostHypergraph, k: int, eps: float = 0.03,
                    plan=None, race: bool = True,
                    race_seed: int = 0,
                    dist_coarsen: bool = True,
-                   compensated_psum: bool = False) -> PartitionResult:
+                   compensated_psum: bool = False,
+                   shard_graph: bool = False) -> PartitionResult:
     """k-way balanced partitioning; cut-net results from minimizing
     connectivity, exactly as the paper frames it.
 
-    plan/race/race_seed/dist_coarsen/compensated_psum mirror
+    plan/race/race_seed/dist_coarsen/compensated_psum/shard_graph mirror
     `partitioner.partition`: with a `Plan`, each coarsening level runs
     mesh-sharded via `dist.partition.coarsen_level`/`contract_level` and
     each refinement level as mesh-raced replicas with sharded pipelines via
-    `dist.partition.refine_level`."""
+    `dist.partition.refine_level`; `shard_graph` memory-shards the
+    pins-sized storage over the plan's "model" axis (`dist.graph`)."""
     t0 = time.perf_counter()
     omega = max(int((1 + eps) * hg.n_nodes / k), math.ceil(hg.n_nodes / k))
     caps = Caps.for_host(hg)
-    d = device_from_host(hg, caps)
+    # exact int64 level-0 audit (see partitioner.partition): with this
+    # passed the per-level int32 device counts below cannot wrap
+    check_expansion_caps(caps, host_pair_count(hg))
+    if shard_graph:
+        if plan is None or not dist_coarsen:
+            raise ValueError("shard_graph=True requires a Plan and "
+                             "dist_coarsen=True")
+        from repro.dist.graph import sharded_from_host
+        d = sharded_from_host(hg, caps, plan)
+    else:
+        d = device_from_host(hg, caps)
     cparams = CoarsenParams(omega=omega, delta=BIG_DELTA, n_cands=n_cands,
                             use_kernels=use_kernels)
     if coarse_target is None:
@@ -91,20 +106,32 @@ def partition_kway(hg: HostHypergraph, k: int, eps: float = 0.03,
                                            compensated=compensated_psum)
     t_coarsen = time.perf_counter()
     while int(d.n_nodes) > coarse_target and len(gammas) < max_levels:
-        match, n_pairs = _coarsen(d, caps)
-        if int(n_pairs) == 0:
+        match, n_pairs, ovf = _coarsen(d, caps)
+        # one batched sync per level; audit before trusting the matches
+        pairs_live, nbr_entries, n_pairs_h = (
+            int(v) for v in jax.device_get([*ovf, n_pairs]))
+        check_expansion_caps(caps, pairs_live, nbr_entries)
+        if n_pairs_h == 0:
             break
         d2, gamma = _contract(d, match, caps)
         if collect_log:
             log.append(dict(kind="coarsen", level=len(gammas),
-                            nodes=int(d.n_nodes), pairs=int(n_pairs)))
+                            nodes=int(d.n_nodes), pairs=n_pairs_h))
         levels.append(d)
         gammas.append(gamma)
         d = d2
+    # drain the dispatch tail so the phase timer doesn't leak into the
+    # host-side initial-partitioning step below
+    jax.block_until_ready((d, gammas))
     t_coarsen = time.perf_counter() - t_coarsen
+    check_expansion_caps(caps, device_pair_count(d.edge_off))
 
     # ---- initial k-way on the coarsest graph (host, tiny) ----------------
-    coarse_host = host_from_device(d)
+    if shard_graph:
+        from repro.dist.graph import host_from_sharded
+        coarse_host = host_from_sharded(d)
+    else:
+        coarse_host = host_from_device(d)
     coarse_sizes = np.asarray(d.node_size)[: coarse_host.n_nodes]
     init = greedy_initial_kway(coarse_host, coarse_sizes, k, omega)
     kcap = _next_pow2(k)
@@ -126,6 +153,9 @@ def partition_kway(hg: HostHypergraph, k: int, eps: float = 0.03,
         parts = jnp.where(jnp.arange(caps.n) < d_lvl.n_nodes,
                           parts[jnp.clip(g, 0, caps.n - 1)], 0)
         parts = _refine(d_lvl, parts, caps, lvl)
+    # block before reading the timer (the tail would otherwise drain in
+    # np.asarray below, after the timer stopped)
+    jax.block_until_ready(parts)
     t_refine = time.perf_counter() - t_refine
 
     parts_np = np.asarray(parts)[: hg.n_nodes].astype(np.int64)

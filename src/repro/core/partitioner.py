@@ -24,7 +24,9 @@ import numpy as np
 from repro.core import metrics
 from repro.core.contract import contract
 from repro.core.coarsen import CoarsenParams, coarsen_step
-from repro.core.hypergraph import (Caps, HostHypergraph, device_from_host)
+from repro.core.hypergraph import (Caps, HostHypergraph,
+                                   check_expansion_caps, device_from_host,
+                                   device_pair_count, host_pair_count)
 from repro.core.refine import RefineParams, refine_level
 
 
@@ -47,7 +49,8 @@ def _next_pow2(x: int) -> int:
 def make_coarsen_fns(cparams: CoarsenParams, plan, dist_coarsen: bool = True,
                      compensated: bool = False):
     """Per-level coarsening dispatchers shared by `partition` and
-    `kway.partition_kway`: returns `(coarsen(d, caps) -> (match, n_pairs),
+    `kway.partition_kway`: returns `(coarsen(d, caps) -> (match, n_pairs,
+    (n_pairs_live, n_nbr_entries)),
     contract(d, match, caps) -> (d2, gamma))`. With a `Plan` (and
     `dist_coarsen`), both run on the mesh via `dist.partition.coarsen_level`
     / `contract_level` — bit-exact with the single-device pair when
@@ -55,11 +58,15 @@ def make_coarsen_fns(cparams: CoarsenParams, plan, dist_coarsen: bool = True,
     striped pipeline, whose eta fp order differs from the kernel's).
     ``compensated`` opts the eta / matching-sum0 float reductions into the
     Neumaier-compensated psum (O(dense) traffic, ~1 ulp, not
-    bit-identical)."""
+    bit-identical).
+
+    Both dispatchers return the same shapes in either mode; `_coarsen`'s
+    trailing ``(n_pairs_live, n_nbr_entries)`` pair feeds the drivers'
+    host-side capacity-overflow audit (`check_expansion_caps`)."""
     if plan is None or not dist_coarsen:
         def _coarsen(d_, caps_):
-            match, n_pairs, _ = coarsen_step(d_, caps_, cparams)
-            return match, n_pairs
+            match, n_pairs, props = coarsen_step(d_, caps_, cparams)
+            return match, n_pairs, (props.n_pairs_live, props.n_nbr_entries)
 
         def _contract(d_, match_, caps_):
             return contract(d_, match_, caps_)
@@ -106,7 +113,10 @@ def partition(hg: HostHypergraph, omega: int, delta: int,
               plan=None, race: bool = True,
               race_seed: int = 0,
               dist_coarsen: bool = True,
-              compensated_psum: bool = False) -> PartitionResult:
+              compensated_psum: bool = False,
+              shard_graph: bool = False,
+              pair_cap: int | None = None,
+              nbr_cap: int | None = None) -> PartitionResult:
     """Full multi-level constrained partitioning (paper's SNN mode).
 
     bucket=True enables pow2 capacity re-bucketing between levels (perf
@@ -127,12 +137,43 @@ def partition(hg: HostHypergraph, omega: int, delta: int,
     opts the coarsening eta / matching-sum0 float reductions into the
     Neumaier-compensated psum (O(dense) traffic instead of the stripe-order
     lane gather; within ~1 ulp but not bit-identical to one device).
+
+    shard_graph=True additionally memory-shards the graph *storage*: the
+    pins-sized arrays of every level live as per-shard stripes over the
+    plan's "model" axis (`dist.graph.ShardedHypergraph`; racing replicas
+    share the one striped copy) — bit-identical results, O(pins / shards)
+    storage per device. Requires `plan` and `dist_coarsen`; incompatible
+    with `bucket` (re-bucketing would re-slice the fixed stripe layout).
+
+    pair_cap / nbr_cap override `Caps.for_host`'s exact pair-expansion /
+    neighborhood capacities (e.g. to bound memory). Undersizing them does
+    not silently truncate: every level's live counts are audited host-side
+    and overflow raises `CapacityError`.
     """
     from repro.core.hypergraph import shrink_device
 
     t0 = time.perf_counter()
-    caps = Caps.for_host(hg)
-    d = device_from_host(hg, caps)
+    caps = Caps.for_host(hg, pair_cap=pair_cap, nbr_cap=nbr_cap)
+    # exact int64 level-0 audit before any device work: with this passed,
+    # pair monotonicity under coarsening bounds every level's count by
+    # caps.pairs < 2**31, making the per-level int32 device counts exact
+    check_expansion_caps(caps, host_pair_count(hg))
+    if shard_graph:
+        if plan is None:
+            raise ValueError("shard_graph=True requires a Plan (mesh) — "
+                             "graph stripes live on its 'model' axis")
+        if not dist_coarsen:
+            raise ValueError("shard_graph=True requires dist_coarsen=True: "
+                             "the single-device coarsen path cannot read "
+                             "memory-sharded storage")
+        if bucket:
+            raise ValueError("bucket=True is incompatible with "
+                             "shard_graph=True: capacity re-bucketing would "
+                             "re-slice the fixed stripe layout")
+        from repro.dist.graph import sharded_from_host
+        d = sharded_from_host(hg, caps, plan)
+    else:
+        d = device_from_host(hg, caps)
     cparams = CoarsenParams(omega=omega, delta=delta, n_cands=n_cands,
                             use_kernels=use_kernels, matching=matching)
 
@@ -143,24 +184,47 @@ def partition(hg: HostHypergraph, omega: int, delta: int,
                                            compensated=compensated_psum)
     t_coarsen = time.perf_counter()
     while int(d.n_nodes) > target and len(gammas) < max_levels:
-        match, n_pairs = _coarsen(d, caps)
-        if int(n_pairs) == 0:
+        match, n_pairs, ovf = _coarsen(d, caps)
+        # one batched sync for the level's three scalars, then audit
+        # BEFORE trusting the matches: the device pipelines drop
+        # out-of-capacity lanes silently, so an undersized Caps must raise
+        # here, not mis-partition
+        pairs_live, nbr_entries, n_pairs_h = (
+            int(v) for v in jax.device_get([*ovf, n_pairs]))
+        check_expansion_caps(caps, pairs_live, nbr_entries)
+        if n_pairs_h == 0:
             break
         d2, gamma = _contract(d, match, caps)
         if collect_log:
             log.append(dict(kind="coarsen", level=len(gammas),
-                            nodes=int(d.n_nodes), pairs=int(n_pairs),
+                            nodes=int(d.n_nodes), pairs=n_pairs_h,
                             caps_n=caps.n))
         levels.append((d, caps))
         gammas.append(gamma)
         d = d2
         if bucket:
             d, caps = shrink_device(d, caps)
+    # drain the async dispatch tail before stopping the phase timer —
+    # otherwise the last contract finishes during refinement (or during
+    # the final np.asarray readback) and the phase columns under-report
+    jax.block_until_ready((d, gammas))
     t_coarsen = time.perf_counter() - t_coarsen
+    # the coarsest graph is refined below but never re-entered coarsening,
+    # so audit its pair expansion (refinement's in-sequence gains expand
+    # the same pairs) — every earlier level was audited in the loop
+    check_expansion_caps(caps, device_pair_count(d.edge_off))
 
     # initial partitioning == coarsest clusters (Sec. III)
     k = int(d.n_nodes)
-    kcap = kcap_hint or _next_pow2(k)
+    if kcap_hint is None:
+        kcap = _next_pow2(k)
+    else:
+        if kcap_hint < k:
+            raise ValueError(
+                f"kcap_hint={kcap_hint} is below the coarsest partition "
+                f"count k={k}: partition ids would be silently clipped. "
+                f"Pass kcap_hint >= k (or None for the default pow2).")
+        kcap = kcap_hint
     parts = jnp.where(jnp.arange(caps.n) < k,
                       jnp.arange(caps.n, dtype=jnp.int32), 0)
 
@@ -184,6 +248,9 @@ def partition(hg: HostHypergraph, omega: int, delta: int,
         parts = _refine(d_lvl, parts, caps_lvl, lvl)
         if collect_log:
             log.append(dict(kind="refine", level=lvl))
+    # block before reading the timer: the refine tail would otherwise
+    # drain inside np.asarray(parts) below, after t_refine stopped
+    jax.block_until_ready(parts)
     t_refine = time.perf_counter() - t_refine
 
     parts_np = np.asarray(parts)[: hg.n_nodes].astype(np.int64)

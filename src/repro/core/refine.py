@@ -72,7 +72,7 @@ def pins_matrix(d: DeviceHypergraph, parts: jax.Array, caps: Caps, kcap: int,
     live = in_rng & (t < d.n_pins)
     e_of = ctx.rows(d.edge_off, t, caps.p, caps.e)
     e_safe = jnp.clip(e_of, 0, caps.e - 1)
-    pin = jnp.clip(d.edge_pins[t], 0, caps.n - 1)
+    pin = jnp.clip(ctx.gread(d.edge_pins, t, live, 0), 0, caps.n - 1)
     p_of = jnp.where(live, parts[pin], kcap)
     rel = t - d.edge_off[e_safe]
     is_dst = live & (rel >= d.edge_nsrc[e_safe])
@@ -106,7 +106,7 @@ def propose_moves(d: DeviceHypergraph, parts: jax.Array, pins: jax.Array,
     live = in_rng & (t < d.n_pins)
     n_of = ctx.rows(d.node_off, t, caps.p, caps.n)
     n_safe = jnp.clip(n_of, 0, caps.n - 1)
-    e = jnp.clip(d.node_edges[t], 0, caps.e - 1)
+    e = jnp.clip(ctx.gread(d.node_edges, t, live, 0), 0, caps.e - 1)
     w = jnp.where(live, d.edge_w[e], 0.0)
     p_n = parts[n_safe]
 
@@ -278,7 +278,7 @@ def inseq_gains(d: DeviceHypergraph, parts: jax.Array, pins: jax.Array,
                 caps: Caps, kcap: int,
                 ctx: segops.ShardCtx = segops.ShardCtx()):
     pidx, p_ok = ctx.lanes(caps.pairs)
-    pairs = build_pairs(d, caps, idx=pidx, idx_ok=p_ok)
+    pairs = build_pairs(d, caps, idx=pidx, idx_ok=p_ok, ctx=ctx)
     n = jnp.clip(pairs.n, 0, caps.n - 1)
     m = jnp.clip(pairs.m, 0, caps.n - 1)
     e = jnp.clip(pairs.edge, 0, caps.e - 1)
@@ -314,7 +314,7 @@ def inseq_gains(d: DeviceHypergraph, parts: jax.Array, pins: jax.Array,
     # slot_n indexes edge_pins: node at that slot, edge via rows
     e_slot = ctx.rows(d.edge_off, t, caps.p, caps.e)
     e_slot = jnp.clip(e_slot, 0, caps.e - 1)
-    n_slot = jnp.clip(d.edge_pins[t], 0, caps.n - 1)
+    n_slot = jnp.clip(ctx.gread(d.edge_pins, t, slot_live, 0), 0, caps.n - 1)
     is_mover = slot_live & (move_to[n_slot] >= 0)
     psn = parts[n_slot]
     pdn = jnp.clip(move_to[n_slot], 0, kcap - 1)
@@ -404,8 +404,9 @@ def events_validity(d: DeviceHypergraph, parts: jax.Array,
     slot_live = t_ok & (t < d.n_pins)
     n_of = ctx.rows(d.node_off, t, caps.p, caps.n)
     n_safe = jnp.clip(n_of, 0, caps.n - 1)
-    e_in = jnp.clip(d.node_edges[t], 0, caps.e - 1)
-    is_ev = slot_live & d.node_is_in[t] & mover[n_safe]
+    e_in = jnp.clip(ctx.gread(d.node_edges, t, slot_live, 0), 0, caps.e - 1)
+    is_ev = (ctx.gread(d.node_is_in, t, slot_live, False)
+             & slot_live & mover[n_safe])
     ie_p = jnp.concatenate([jnp.where(is_ev, ps[n_safe], kcap),
                             jnp.where(is_ev, pd[n_safe], kcap)])
     ie_e = jnp.concatenate([jnp.where(is_ev, e_in, caps.e)] * 2)

@@ -4,3 +4,4 @@ from repro.dist.sharding import Plan  # noqa: F401
 # `repro.dist.partition.refine_level` / `.partition` both resolve
 from repro.dist import partition  # noqa: F401
 from repro.dist import sort  # noqa: F401  (distributed sample sort)
+from repro.dist import graph  # noqa: F401  (memory-sharded graph storage)

@@ -84,12 +84,31 @@ so the contracted hypergraph, not just the final parts vector, matches the
 single-device level byte-for-byte; refinement then starts each level from
 identical state.
 
+**Sharded graph storage** (`dist.graph.ShardedHypergraph`): the pins-sized
+storage arrays may additionally arrive as per-shard lane stripes over
+"model" instead of replicated copies (`--shard-graph`; racing replicas
+then share the one sharded graph across "data"). The exactness rules
+extend unchanged, because striping is pure layout:
+
+  * own-stripe reads (`ShardCtx.gread`) return exactly the replicated
+    array's values at this shard's lane positions — every pins/pairs
+    pipeline stage already indexed only its own lanes;
+  * the one arbitrary-position access (`build_pairs` joining two pin
+    slots per pair lane) transiently rebuilds the pins column with the
+    bit-preserving `ShardCtx.gfull` (psum of disjoint int32 stripes, the
+    `unstripe` combine — never a float psum);
+  * contraction emits the coarse pins arrays as stripes (reduce-scatter
+    of the integer packing scatter + stripe-kept incidence sort) — the
+    same integers the replicated path scatters, in the same slots, so
+    levels stay striped end-to-end and stay bit-exact.
+
 Exactness: with racing off (or on the 1-replica data axis) every replica
 uses the identity permutation, and with the combine discipline above every
 sharded stage of both coarsening and refinement reproduces the
 single-device arithmetic exactly, so the full V-cycle is bit-identical to
-`core.partitioner.partition` — enforced by the parity tests in
-tests/test_dist_partition.py under 8 forced host devices.
+`core.partitioner.partition` — with replicated *or* memory-sharded graph
+storage — enforced by the parity tests in tests/test_dist_partition.py
+under 8 forced host devices on (2, 4) and (1, 8) meshes.
 """
 from __future__ import annotations
 
@@ -104,9 +123,19 @@ from repro.core.coarsen import CoarsenParams, coarsen_step_impl
 from repro.core.contract import contract_impl
 from repro.core.hypergraph import Caps
 from repro.core.refine import RefineParams, refine_step_impl
+from repro.dist.graph import ShardedHypergraph, graph_pspecs
 from repro.dist.sharding import Plan
 from repro.models import common
 from repro.utils import segops
+
+
+def _graph_arg(d):
+    """(inner DeviceHypergraph, storage-striped?) — the drivers accept
+    replicated `DeviceHypergraph`s and memory-sharded `ShardedHypergraph`s
+    interchangeably; the wrapper is the dispatch marker."""
+    if isinstance(d, ShardedHypergraph):
+        return d.g, True
+    return d, False
 
 
 def plan_axes(plan: Plan) -> tuple[str | None, str | None, int]:
@@ -135,11 +164,14 @@ def plan_axes(plan: Plan) -> tuple[str | None, str | None, int]:
 
 @functools.lru_cache(maxsize=None)
 def _build_step(mesh, data_axis: str, model_axis: str | None, nshards: int,
-                caps: Caps, kcap: int, params: RefineParams, race: bool):
+                caps: Caps, kcap: int, params: RefineParams, race: bool,
+                striped: bool = False):
     """One raced+sharded repetition, jitted; cached per static signature so
     the host-driven level loop compiles once per capacity bucket (exactly
-    like `core.refine.refine_step`)."""
-    ctx = segops.ShardCtx(axis=model_axis, nshards=nshards)
+    like `core.refine.refine_step`). ``striped``: the graph's pins-sized
+    arrays enter as per-shard stripes over "model" (`dist.graph`)."""
+    ctx = segops.ShardCtx(axis=model_axis, nshards=nshards,
+                          graph_striped=striped and model_axis is not None)
 
     def body(d, parts, n_parts, key, enforce):
         ids = jnp.arange(caps.n, dtype=jnp.int32)
@@ -165,7 +197,7 @@ def _build_step(mesh, data_axis: str, model_axis: str | None, nshards: int,
         return parts_out, gains[best], nmv_out
 
     fn = common.shard_map(body, mesh=mesh,
-                          in_specs=(P(), P(), P(), P(), P()),
+                          in_specs=(graph_pspecs(striped), P(), P(), P(), P()),
                           out_specs=(P(), P(), P()))
     return jax.jit(fn)
 
@@ -176,14 +208,18 @@ def refine_level(d, parts, n_parts, caps: Caps, kcap: int,
     """Drop-in for `core.refine.refine_level` on a mesh: Theta rounds, each
     an R-way replica race (R = data-axis size) over pipelines sharded
     M-way (M = model-axis size). `race=False` pins every replica to the
-    identity tie-break — deterministic parity mode."""
+    identity tie-break — deterministic parity mode. ``d`` may be a
+    replicated `DeviceHypergraph` or a memory-sharded
+    `dist.graph.ShardedHypergraph` (racing replicas then share the one
+    striped copy of the pins arrays)."""
     if params.use_kernels:
         # Pallas kernels assume whole-array lanes; the sharded pipeline
         # replaces them (they are the same segment reductions, striped)
         params = dataclasses.replace(params, use_kernels=False)
+    d, striped = _graph_arg(d)
     data_axis, model_axis, nshards = plan_axes(plan)
     step = _build_step(plan.mesh, data_axis, model_axis, nshards,
-                       caps, kcap, params, bool(race))
+                       caps, kcap, params, bool(race), striped)
     n_parts = jnp.asarray(n_parts, jnp.int32)
     key = jax.random.PRNGKey(seed)
     for rep in range(params.theta):
@@ -199,32 +235,36 @@ def refine_level(d, parts, n_parts, caps: Caps, kcap: int,
 @functools.lru_cache(maxsize=None)
 def _build_coarsen_step(mesh, model_axis: str | None, nshards: int,
                         caps: Caps, cparams: CoarsenParams,
-                        compensated: bool = False):
+                        compensated: bool = False, striped: bool = False):
     """One sharded coarsening level (proposal + matching), jitted; cached
     per static signature like `_build_step`. ``compensated`` opts the eta /
     matching-sum0 float reductions into `ShardCtx.psum_compensated`
     (O(dense) traffic, ~1 ulp, not bit-identical — see segops)."""
     ctx = segops.ShardCtx(axis=model_axis, nshards=nshards,
-                          compensated=compensated)
+                          compensated=compensated,
+                          graph_striped=striped and model_axis is not None)
 
     def body(d):
-        match, n_pairs, _ = coarsen_step_impl(d, caps, cparams, ctx)
-        return match, n_pairs
+        match, n_pairs, props = coarsen_step_impl(d, caps, cparams, ctx)
+        return match, n_pairs, props.n_pairs_live, props.n_nbr_entries
 
-    fn = common.shard_map(body, mesh=mesh, in_specs=(P(),),
-                          out_specs=(P(), P()))
+    fn = common.shard_map(body, mesh=mesh, in_specs=(graph_pspecs(striped),),
+                          out_specs=(P(), P(), P(), P()))
     return jax.jit(fn)
 
 
 @functools.lru_cache(maxsize=None)
-def _build_contract(mesh, model_axis: str | None, nshards: int, caps: Caps):
-    ctx = segops.ShardCtx(axis=model_axis, nshards=nshards)
+def _build_contract(mesh, model_axis: str | None, nshards: int, caps: Caps,
+                    striped: bool = False):
+    ctx = segops.ShardCtx(axis=model_axis, nshards=nshards,
+                          graph_striped=striped and model_axis is not None)
 
     def body(d, match):
         return contract_impl(d, match, caps, ctx)
 
-    fn = common.shard_map(body, mesh=mesh, in_specs=(P(), P()),
-                          out_specs=(P(), P()))
+    fn = common.shard_map(body, mesh=mesh,
+                          in_specs=(graph_pspecs(striped), P()),
+                          out_specs=(graph_pspecs(striped), P()))
     return jax.jit(fn)
 
 
@@ -246,23 +286,36 @@ def coarsen_level(d, caps: Caps, cparams: CoarsenParams, plan: Plan,
     kernel path is replaced by the striped segment pipeline, whose eta sums
     in a different fp order than the kernel — so bit-exact parity with the
     single-device run is only guaranteed against its `use_kernels=False`
-    path."""
+    path.
+
+    Returns ``(match, n_matched_pairs, (n_pairs_live, n_nbr_entries))`` —
+    the trailing pair feeds the drivers' host-side capacity-overflow audit
+    (`core.hypergraph.check_expansion_caps`)."""
     if cparams.use_kernels:
         # Pallas kernels assume whole-array lanes; the sharded pipeline
         # replaces them (same segment reductions, striped)
         cparams = dataclasses.replace(cparams, use_kernels=False)
+    d, striped = _graph_arg(d)
     _, model_axis, nshards = plan_axes(plan)
     step = _build_coarsen_step(plan.mesh, model_axis, nshards, caps, cparams,
-                               bool(compensated))
-    return step(d)
+                               bool(compensated), striped)
+    match, n_pairs, pairs_live, nbr_entries = step(d)
+    return match, n_pairs, (pairs_live, nbr_entries)
 
 
 def contract_level(d, match, caps: Caps, plan: Plan):
     """Drop-in for `core.contract.contract` on a mesh: integer-only
-    pipeline, bit-exact sharded contraction. Returns (d_coarse, gamma)."""
+    pipeline, bit-exact sharded contraction. Returns (d_coarse, gamma).
+    With a memory-sharded input graph the coarse graph comes back
+    memory-sharded too (its pins arrays are emitted as "model" stripes),
+    so the level loop stays striped end-to-end."""
+    d, striped = _graph_arg(d)
     _, model_axis, nshards = plan_axes(plan)
-    fn = _build_contract(plan.mesh, model_axis, nshards, caps)
-    return fn(d, match)
+    fn = _build_contract(plan.mesh, model_axis, nshards, caps, striped)
+    d2, gamma = fn(d, match)
+    if striped:
+        d2 = ShardedHypergraph(g=d2, nshards=nshards)
+    return d2, gamma
 
 
 def partition(hg, omega: int, delta: int, plan: Plan, *, race: bool = True,

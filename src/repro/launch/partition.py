@@ -10,8 +10,11 @@ locally visible devices and routes the whole V-cycle on-mesh: coarsening
 through `dist.partition.coarsen_level`/`contract_level` (sharded pairs/pins
 pipelines over "model"; `--single-coarsen` keeps coarsening on one device)
 and refinement through `dist.partition.refine_level` (replica racing over
-"data", sharded pins pipelines over "model"). Force a multi-device CPU run
-with XLA_FLAGS=--xla_force_host_platform_device_count=8.
+"data", sharded pins pipelines over "model"). `--shard-graph` additionally
+memory-shards the graph *storage* (pins-sized arrays as per-shard stripes
+over "model", shared by the racing replicas — `dist.graph`). Force a
+multi-device CPU run with
+XLA_FLAGS=--xla_force_host_platform_device_count=8.
 """
 from __future__ import annotations
 
@@ -48,6 +51,12 @@ def main(argv=None):
     ap.add_argument("--single-coarsen", action="store_true",
                     help="keep coarsening single-device (refinement still "
                          "runs on the mesh)")
+    ap.add_argument("--shard-graph", action="store_true",
+                    help="memory-shard the graph storage: pins-sized arrays "
+                         "live as per-shard stripes over the mesh's model "
+                         "axis (racing replicas share the one sharded copy); "
+                         "bit-identical results, O(pins/shards) storage per "
+                         "device (requires --mesh host)")
     ap.add_argument("--compensated-psum", action="store_true",
                     help="combine the coarsening eta / matching-sum0 float "
                          "reductions with the Neumaier-compensated psum "
@@ -71,11 +80,15 @@ def main(argv=None):
     print("hypergraph:", hg.stats())
 
     plan = build_plan(args.replicas) if args.mesh == "host" else None
+    if args.shard_graph and plan is None:
+        raise SystemExit("--shard-graph requires --mesh host (graph stripes "
+                         "live on the mesh's model axis)")
     res = partition(hg, omega=args.omega, delta=args.delta, theta=args.theta,
                     plan=plan, race=not args.no_race,
                     race_seed=args.race_seed,
                     dist_coarsen=not args.single_coarsen,
-                    compensated_psum=args.compensated_psum)
+                    compensated_psum=args.compensated_psum,
+                    shard_graph=args.shard_graph)
     out = dict(
         connectivity=res.connectivity, cut_net=res.cut_net,
         n_parts=res.n_parts, n_levels=res.n_levels,
@@ -85,6 +98,7 @@ def main(argv=None):
         mesh=(dict(plan.mesh.shape) if plan is not None else None),
         race=(not args.no_race) if plan is not None else None,
         dist_coarsen=(not args.single_coarsen) if plan is not None else None,
+        shard_graph=args.shard_graph if plan is not None else None,
     )
     print(json.dumps(out, indent=2))
     if args.json:

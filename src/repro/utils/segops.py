@@ -61,6 +61,12 @@ class ShardCtx:
     # shard order): O(dense) traffic, ~1 ulp of the true sum, but not
     # bit-identical to the single-device order.
     compensated: bool = False
+    # the hypergraph's pins-sized storage arrays (edge_pins / node_edges /
+    # node_is_in, see `dist.graph.ShardedHypergraph`) arrive in the
+    # shard_map body as this shard's contiguous lane stripe instead of a
+    # replicated full-length copy; `gread`/`gfull` pick the matching access
+    # path so the pipelines are written once for both layouts.
+    graph_striped: bool = False
 
     def index(self) -> jax.Array:
         if self.axis is None:
@@ -117,6 +123,35 @@ class ShardCtx:
         for ``lanes, ok = self.lanes(total)`` (clip keeps the tail shard's
         padding lanes in-bounds)."""
         return jnp.where(ok, x[jnp.clip(lanes, 0, x.shape[0] - 1)], fill)
+
+    def gread(self, arr: jax.Array, t: jax.Array, ok: jax.Array,
+              fill) -> jax.Array:
+        """Own-stripe read of a pins-sized *graph storage* array at this
+        shard's lanes ``t, ok = self.lanes(total)``. With ``graph_striped``
+        (inside ``dist.partition``'s shard_map over a memory-sharded
+        ``dist.graph.ShardedHypergraph``) ``arr`` already *is* this shard's
+        local stripe, so the read is the local array masked to ``fill``;
+        otherwise it is the standard stripe-local gather from the
+        replicated full-length array (``take``). Bit-identical either way:
+        the striped storage holds exactly the replicated array's values at
+        this shard's lane positions (sentinel-padded past ``total``)."""
+        if self.graph_striped and self.axis is not None:
+            return jnp.where(ok, arr, fill)
+        return self.take(arr, t, ok, fill)
+
+    def gfull(self, arr: jax.Array) -> jax.Array:
+        """Full pins-sized column from graph storage — the *documented
+        transient* for arbitrary-position reads (only ``build_pairs``: the
+        pair expansion joins two arbitrary pin slots of ``edge_pins``, an
+        access no lane striping can serve). With ``graph_striped`` this
+        rebuilds the full column via ``unstripe`` (psum of disjoint stripe
+        scatters — bit-preserving), live only for the duration of the
+        expansion; the persistent storage stays O(pins / shards). Without
+        striped storage the array is already full-length and is returned
+        as-is."""
+        if self.graph_striped and self.axis is not None:
+            return self.unstripe(arr)
+        return arr
 
     def rows(self, offsets: jax.Array, t: jax.Array, total: int,
              num_rows: int) -> jax.Array:

@@ -1,0 +1,147 @@
+"""Regression tests for the silent-corruption bug class around static
+device capacities and the driver-loop host syncs.
+
+Before these fixes: an undersized ``Caps.pairs``/``Caps.nbrs`` silently
+truncated the pair expansion / neighborhood CSR (`mode="drop"` scatters)
+and mis-partitioned with no error; a ``kcap_hint`` below the coarsest
+partition count silently clipped partition ids; ``shrink_device`` paid a
+blocking O(E) ``edge_off`` readback per bucketed level; and the phase
+timers stopped before the async dispatch tail drained."""
+import numpy as np
+import pytest
+
+from repro.core import generate
+from repro.core import hypergraph as H
+from repro.core.hypergraph import CapacityError
+from repro.core.partitioner import partition
+
+
+def _graph():
+    return generate.snn_layered(n_layers=3, width=12, fanout=4, window=6,
+                                seed=1)
+
+
+# ---------------------------------------------------------------------------
+# capacity-overflow audit
+# ---------------------------------------------------------------------------
+def test_undersized_pair_cap_raises():
+    hg = _graph()
+    with pytest.raises(CapacityError, match=r"pair-expansion overflow"):
+        partition(hg, omega=8, delta=32, theta=2, pair_cap=4)
+
+
+def test_undersized_nbr_cap_raises():
+    hg = _graph()
+    with pytest.raises(CapacityError, match=r"neighborhood overflow"):
+        partition(hg, omega=8, delta=32, theta=2, nbr_cap=2)
+
+
+def test_overflow_message_reports_live_vs_capacity():
+    hg = _graph()
+    exact = int(hg.stats()["pair_expansion"])
+    with pytest.raises(CapacityError, match=rf"{exact}.*Caps\.pairs=4"):
+        partition(hg, omega=8, delta=32, theta=2, pair_cap=4)
+
+
+def test_exact_caps_do_not_raise():
+    hg = _graph()
+    caps = H.Caps.for_host(hg)  # exact bounds by default
+    res = partition(hg, omega=8, delta=32, theta=2,
+                    pair_cap=caps.pairs, nbr_cap=caps.nbrs)
+    assert res.audit["size_ok"] and res.audit["inbound_ok"]
+
+
+def test_check_expansion_caps_unit():
+    caps = H.Caps(n=4, e=4, p=8, pairs=10, nbrs=5)
+    H.check_expansion_caps(caps, 10, 5)  # at capacity: fine
+    with pytest.raises(CapacityError, match="11"):
+        H.check_expansion_caps(caps, 11, 0)
+    with pytest.raises(CapacityError, match="6"):
+        H.check_expansion_caps(caps, 10, 6)
+
+
+# ---------------------------------------------------------------------------
+# kcap_hint validation
+# ---------------------------------------------------------------------------
+def test_kcap_hint_below_k_raises():
+    hg = _graph()
+    with pytest.raises(ValueError, match=r"kcap_hint=1 is below"):
+        partition(hg, omega=8, delta=32, theta=2, kcap_hint=1)
+
+
+def test_kcap_hint_zero_raises_instead_of_silent_fallback():
+    # `kcap_hint or default` used to treat 0 as "unset"; it is now an error
+    hg = _graph()
+    with pytest.raises(ValueError, match=r"kcap_hint=0"):
+        partition(hg, omega=8, delta=32, theta=2, kcap_hint=0)
+
+
+def test_valid_kcap_hint_matches_default():
+    hg = _graph()
+    r0 = partition(hg, omega=8, delta=32, theta=2)
+    r1 = partition(hg, omega=8, delta=32, theta=2, kcap_hint=64)
+    np.testing.assert_array_equal(r0.parts, r1.parts)
+
+
+# ---------------------------------------------------------------------------
+# shrink_device: device-side pair count + roundtrip parity
+# ---------------------------------------------------------------------------
+def test_device_pair_count_matches_host():
+    hg = _graph()
+    caps = H.Caps.for_host(hg)
+    d = H.device_from_host(hg, caps)
+    exact = int(hg.stats()["pair_expansion"])
+    assert H.host_pair_count(hg) == exact
+    assert int(H.device_pair_count(d.edge_off)) == exact
+
+
+def test_host_pair_count_int64_exact_beyond_int32():
+    # the upfront audit must not wrap where the int32 device count would:
+    # one synthetic edge with 2**17 pins has ~2**34 ordered pairs
+    c = 1 << 17
+    hg = H.HostHypergraph(
+        n_nodes=c, edge_off=np.array([0, c], np.int64),
+        edge_pins=np.arange(c, dtype=np.int32),
+        edge_nsrc=np.array([1], np.int32), edge_w=np.ones(1, np.float32))
+    assert H.host_pair_count(hg) == c * (c - 1)  # > 2**31: no wrap
+    caps = H.Caps(n=c, e=1, p=c, pairs=10, nbrs=10)
+    with pytest.raises(CapacityError, match="pair-expansion overflow"):
+        H.check_expansion_caps(caps, H.host_pair_count(hg))
+
+
+def test_shrink_device_host_roundtrip():
+    from repro.core.coarsen import CoarsenParams, coarsen_step
+    from repro.core.contract import contract
+
+    hg = _graph()
+    caps = H.Caps.for_host(hg)
+    d = H.device_from_host(hg, caps)
+    match, n_pairs, _ = coarsen_step(d, caps, CoarsenParams(omega=8, delta=32))
+    assert int(n_pairs) > 0
+    d2, _ = contract(d, match, caps)
+    d2s, caps2 = H.shrink_device(d2, caps)
+    assert caps2.n <= caps.n and caps2.p <= caps.p
+    assert caps2.pairs >= int(H.device_pair_count(d2.edge_off))
+    h_full = H.host_from_device(d2)
+    h_shr = H.host_from_device(d2s)
+    assert h_full.n_nodes == h_shr.n_nodes
+    np.testing.assert_array_equal(h_full.edge_off, h_shr.edge_off)
+    np.testing.assert_array_equal(h_full.edge_pins, h_shr.edge_pins)
+    np.testing.assert_array_equal(h_full.edge_nsrc, h_shr.edge_nsrc)
+    np.testing.assert_array_equal(h_full.edge_w, h_shr.edge_w)
+
+
+def test_bucketed_partition_parity():
+    hg = _graph()
+    r0 = partition(hg, omega=8, delta=32, theta=2)
+    rb = partition(hg, omega=8, delta=32, theta=2, bucket=True)
+    np.testing.assert_array_equal(r0.parts, rb.parts)
+
+
+# ---------------------------------------------------------------------------
+# shard_graph driver validation
+# ---------------------------------------------------------------------------
+def test_shard_graph_requires_plan():
+    hg = _graph()
+    with pytest.raises(ValueError, match="requires a Plan"):
+        partition(hg, omega=8, delta=32, theta=2, shard_graph=True)

@@ -7,7 +7,10 @@ lexicographic (value, id) pmax, or a stripe-ordered gather + replicated
 float reduction (see dist/partition.py), so the *full* distributed V-cycle
 — sharded coarsening + contraction + sharded refinement — must reproduce
 the single-device `partition` *bit-for-bit* (same parts array, same audit,
-same level count). The 8-forced-host-device variants run in a subprocess so
+same level count). Memory-sharded graph storage (`shard_graph=True`,
+`dist.graph.ShardedHypergraph`: pins-sized arrays as per-shard stripes
+over "model") is pure layout, so the same bit-for-bit contract covers it
+on both (2, 4) and (1, 8) meshes. The 8-forced-host-device variants run in a subprocess so
 the main test session keeps its single-device view; CI's slow job
 additionally runs this file with XLA_FLAGS already forcing 8 devices (see
 .github/workflows/ci.yml), which the in-process tests pick up."""
@@ -29,7 +32,7 @@ _CONSTRAINTS = dict(omega=16, delta=64, theta=4)
 def _parity_check():
     """Shared body: single-device partition vs dist partition on whatever
     mesh the current process supports. Returns (r_single, r_dist_norace,
-    r_dist_race)."""
+    r_dist_race, r_dist_norace_sharded_storage)."""
     import jax
     from repro.core import generate
     from repro.core.partitioner import partition
@@ -43,17 +46,23 @@ def _parity_check():
     r0 = partition(hg, **_CONSTRAINTS)
     r1 = partition(hg, **_CONSTRAINTS, plan=plan, race=False)
     r2 = partition(hg, **_CONSTRAINTS, plan=plan, race=True)
-    return r0, r1, r2
+    r3 = partition(hg, **_CONSTRAINTS, plan=plan, race=False,
+                   shard_graph=True)
+    return r0, r1, r2, r3
 
 
 def test_dist_partition_parity_single_device():
     """On a 1-device mesh the raced+sharded driver degenerates to exactly
     the single-device pipeline (fast, runs everywhere)."""
     import jax
-    r0, r1, r2 = _parity_check()
+    r0, r1, r2, r3 = _parity_check()
     assert np.array_equal(r0.parts, r1.parts)
     assert r0.audit["connectivity"] == r1.audit["connectivity"]
     assert r0.n_levels == r1.n_levels  # coarsening rode the mesh too
+    # memory-sharded storage is pure layout: bit-exact in any mesh shape
+    assert np.array_equal(r0.parts, r3.parts)
+    assert r0.audit == r3.audit
+    assert r0.n_levels == r3.n_levels
     if len(jax.devices()) == 1:
         # one replica -> replica 0 -> identity permutation even when racing
         assert np.array_equal(r0.parts, r2.parts)
@@ -82,10 +91,13 @@ def test_coarsen_contract_level_parity():
     d = H.device_from_host(hg, caps)
     cp = CoarsenParams(omega=_CONSTRAINTS["omega"],
                        delta=_CONSTRAINTS["delta"])
-    m0, np0, _ = coarsen_step(d, caps, cp)
-    m1, np1 = dp.coarsen_level(d, caps, cp, plan)
+    m0, np0, props0 = coarsen_step(d, caps, cp)
+    m1, np1, ovf1 = dp.coarsen_level(d, caps, cp, plan)
     assert np.array_equal(np.asarray(m0), np.asarray(m1))
     assert int(np0) == int(np1)
+    # overflow diagnostics agree with the single-device step and with caps
+    assert int(props0.n_pairs_live) == int(ovf1[0]) <= caps.pairs
+    assert int(props0.n_nbr_entries) == int(ovf1[1]) <= caps.nbrs
     d20, g0 = contract(d, m0, caps)
     d21, g1 = dp.contract_level(d, m1, caps, plan)
     assert np.array_equal(np.asarray(g0), np.asarray(g1))
@@ -102,10 +114,15 @@ def test_dist_partition_parity_inprocess_8dev():
     import jax
     if len(jax.devices()) < 8:
         pytest.skip("needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
-    r0, r1, r2 = _parity_check()
+    r0, r1, r2, r3 = _parity_check()
     assert np.array_equal(r0.parts, r1.parts)
     assert r0.audit == r1.audit
     assert r2.audit["size_ok"] and r2.audit["inbound_ok"]
+    # memory-sharded graph storage (pins stripes over "model", shared by
+    # the racing replicas): bit-exact with the single-device run
+    assert np.array_equal(r0.parts, r3.parts)
+    assert r0.audit == r3.audit
+    assert r0.n_levels == r3.n_levels
 
 
 _MULTIDEV = textwrap.dedent("""
@@ -140,7 +157,9 @@ _MULTIDEV = textwrap.dedent("""
     assert np.array_equal(got, exp), (got, exp)
 
     # --- full V-cycle parity (sharded coarsen + contract + refine): ------
-    # 2 racing replicas x 4 pipeline shards and 1 x 8, race off
+    # 2 racing replicas x 4 pipeline shards and 1 x 8, race off; each mesh
+    # also with memory-sharded graph storage (pins arrays striped over
+    # "model", `dist.graph.ShardedHypergraph`) — still bit-exact
     hg = generate.snn_layered(n_layers=4, width=24, fanout=6, window=8,
                               seed=3)
     r0 = partition(hg, omega=16, delta=64, theta=4)
@@ -152,6 +171,47 @@ _MULTIDEV = textwrap.dedent("""
         assert np.array_equal(r0.parts, r1.parts), shape
         assert r0.audit == r1.audit, shape
         assert r0.n_levels == r1.n_levels, shape  # coarsening on-mesh too
+        rs = partition(hg, omega=16, delta=64, theta=4, plan=plan,
+                       race=False, shard_graph=True)
+        assert np.array_equal(r0.parts, rs.parts), ("sharded", shape)
+        assert r0.audit == rs.audit, ("sharded", shape)
+        assert r0.n_levels == rs.n_levels, ("sharded", shape)
+
+    # --- sharded storage really stripes: each device holds 1/4 of the
+    # pins lanes on the (2,4) mesh (replicated across the data axis)
+    from repro.core.hypergraph import Caps
+    from repro.dist import graph as dist_graph
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    plan = Plan.make(mesh)
+    caps = Caps.for_host(hg)
+    g = dist_graph.sharded_from_host(hg, caps, plan)
+    per = -(-caps.p // 4)
+    for f in dist_graph.PINS_FIELDS:
+        arr = getattr(g.g, f)
+        assert arr.shape[0] == per * 4, f
+        for sh in arr.addressable_shards:
+            assert sh.data.shape[0] == per, f
+    assert g.pins_bytes_per_device() * 4 <= 9 * caps.p + 9 * 4  # ~1/4 + pad
+    # racing replicas share the one sharded graph: raced run stays valid
+    r4 = partition(hg, omega=16, delta=64, theta=4, plan=plan, race=True,
+                   race_seed=1, shard_graph=True)
+    assert r4.audit["size_ok"] and r4.audit["inbound_ok"]
+
+    # --- ShardCtx.gread/gfull units on a real 8-way stripe ---------------
+    mesh8 = jax.make_mesh((8,), ("model",))
+    ctx8 = segops.ShardCtx(axis="model", nshards=8, graph_striped=True)
+    rng8 = np.random.default_rng(1)
+    col = jnp.asarray(rng8.integers(0, 100, 64).astype(np.int32))
+    def gbody(c):
+        t, ok = ctx8.lanes(64)
+        own = ctx8.gread(ctx8.stripe(c), t, ok, -1)
+        full = ctx8.gfull(ctx8.stripe(c))
+        return ctx8.gather(own), full
+    gf = common.shard_map(gbody, mesh=mesh8, in_specs=(P(),),
+                          out_specs=(P(), P()))
+    own8, full8 = jax.jit(gf)(col)
+    assert np.array_equal(np.asarray(own8), np.asarray(col))
+    assert np.array_equal(np.asarray(full8)[:64], np.asarray(col))
 
     # --- shard-only mesh (no data axis): racing must be skipped, not run
     # over the pipeline-shard axis (replicas diverging along "model" would
