@@ -7,10 +7,15 @@ import numpy as np
 
 
 def timed(fn, *args, repeat: int = 1, **kw):
+    """Wall-time fn, draining the async dispatch queue each iteration —
+    without the block, jitted callees return futures and the loop times
+    dispatch latency instead of execution."""
+    import jax
+
     outs = None
     t0 = time.perf_counter()
     for _ in range(repeat):
-        outs = fn(*args, **kw)
+        outs = jax.block_until_ready(fn(*args, **kw))
     dt = (time.perf_counter() - t0) / repeat
     return outs, dt
 

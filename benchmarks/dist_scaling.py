@@ -12,7 +12,11 @@ events-scale distributed sample sort in isolation, with the bytes/shard the
 legacy gathered sort would have moved vs the splitter sample that travels
 now), and a `graph_B` column (per-device live bytes of the pins-sized
 storage arrays — sharded, scaling ~1/devices — next to `graph_repl_B`, the
-bytes a replicated copy pins on every device) per device count. On this CPU
+bytes a replicated copy pins on every device) per device count. The V-cycle
+runs with `use_kernels=True`, so the stripe-local Pallas hot loops are on
+the measured path; a `kernel_levels` column (`coarsen_hit/levels +
+refine_hit/levels`) reports how many levels actually dispatched to them.
+On this CPU
 container the "devices" are host threads, so the numbers chart
 overhead/scaling shape rather than real speedup; on an accelerator mesh the
 same harness measures the real thing.
@@ -52,7 +56,11 @@ _CHILD = textwrap.dedent("""
     res = None
     for _ in range(2):   # second run: jit cache warm per caps signature
         res = partition(hg, omega=24, delta=96, theta=4, plan=plan,
-                        race=False, shard_graph=True)
+                        race=False, shard_graph=True, use_kernels=True)
+    kp = res.kernel_path
+    kern = "{}/{}+{}/{}".format(
+        sum(1 for v in kp["coarsen"] if v), len(kp["coarsen"]),
+        sum(1 for v in kp["refine"] if v), len(kp["refine"]))
 
     # per-device live bytes of the pins-sized storage arrays: sharded
     # stripes (the new layout) vs the replicated copy every device used to
@@ -100,6 +108,7 @@ _CHILD = textwrap.dedent("""
                           sort_splitter_B=n_dev * q * 4 * 4,
                           graph_B=int(graph_B),
                           graph_repl_B=int(graph_repl_B),
+                          kernel_levels=kern,
                           connectivity=res.connectivity,
                           n_parts=res.n_parts)))
 """)
@@ -139,6 +148,7 @@ def run() -> list[str]:
             f"sort_gather_B={m['sort_gather_B']} "
             f"sort_splitter_B={m['sort_splitter_B']} "
             f"graph_B={m['graph_B']} graph_repl_B={m['graph_repl_B']} "
+            f"kernel_levels={m['kernel_levels']} "
             f"conn={m['connectivity']:.0f} {rel}"))
     return out
 

@@ -58,7 +58,7 @@ def run() -> list[str]:
     gains_fn = jax.jit(lambda dd, pp, pi: R.propose_moves(
         dd, pp, pi, caps, kcap, rparams, jnp.asarray(False), jnp.int32(24)))
     blk(gains_fn(d, parts, pins))
-    (mv, gi, _), t_gains = timed(lambda: blk(gains_fn(d, parts, pins)))
+    (mv, gi, _, _), t_gains = timed(lambda: blk(gains_fn(d, parts, pins)))
 
     seq_fn = jax.jit(lambda dd, pp, m, g: R.build_sequence(
         dd, pp, m, g, caps, kcap, rparams))

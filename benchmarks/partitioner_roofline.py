@@ -1,19 +1,70 @@
 """Roofline terms for the partitioner's own level-step programs (the
 paper's Fig. 11 analogue, derived from compiled HLO instead of measured
 counters): lower + compile coarsen_step / refine_step, walk the HLO with
-trip correction, report compute vs memory terms against v5e-class peaks."""
+trip correction, report compute vs memory terms against v5e-class peaks.
+
+Two lanes ride along with the HLO rows:
+  * kernel-path coverage — runs a small V-cycle with ``use_kernels=True``
+    and reports, per phase, how many levels actually dispatched to the
+    Pallas kernels (``PartitionResult.kernel_path``). A roofline for
+    kernels that never fire is fiction; this row keeps the dispatch
+    honest.
+  * GPU-mesh lane — on an accelerator backend, times the same V-cycle
+    under a ``Plan`` over all local devices with the kernels *compiled*
+    (``pallas_interpret()`` is False there). On host backends the row is
+    emitted as ``skipped`` so CSV consumers see a stable schema.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import row
+from benchmarks.common import row, timed
 from repro.core import generate
 from repro.core import hypergraph as H
 from repro.core import refine as R
 from repro.core.coarsen import CoarsenParams, coarsen_step
 from repro.launch import hlo_cost
 from repro.launch.dryrun import HBM_BW, PEAK_FLOPS
+
+ACCEL_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
+def _coverage(kernel_path: dict) -> str:
+    c, r = kernel_path["coarsen"], kernel_path["refine"]
+    return (f"coarsen_kernel_levels={sum(1 for v in c if v)}/{len(c)} "
+            f"refine_kernel_levels={sum(1 for v in r if v)}/{len(r)}")
+
+
+def kernel_coverage_rows(hg, omega: int, delta: int) -> list[str]:
+    """Per-level kernel-path coverage for a kernels-on V-cycle."""
+    from repro.core.partitioner import partition
+
+    res, dt = timed(partition, hg, omega=omega, delta=delta, theta=2,
+                    use_kernels=True)
+    return [row("partitioner_roofline/kernel_coverage", dt * 1e6,
+                _coverage(res.kernel_path))]
+
+
+def gpu_mesh_rows(hg, omega: int, delta: int) -> list[str]:
+    """Kernels-on V-cycle on a device mesh, compiled Pallas — accelerator
+    backends only (the CPU backend has no compiled Pallas path)."""
+    backend = jax.default_backend()
+    if backend not in ACCEL_BACKENDS:
+        return [row("partitioner_roofline/gpu_mesh", 0.0,
+                    f"skipped backend={backend}")]
+    from repro.core.partitioner import partition
+    from repro.dist.sharding import Plan
+
+    n_dev = len(jax.devices())
+    plan = Plan.make(jax.make_mesh((1, n_dev), ("data", "model")))
+    kw = dict(omega=omega, delta=delta, theta=2, use_kernels=True,
+              plan=plan, race=False)
+    timed(partition, hg, **kw)  # warm the compile caches
+    res, dt = timed(partition, hg, **kw)
+    return [row("partitioner_roofline/gpu_mesh", dt * 1e6,
+                f"backend={backend} devices={n_dev} "
+                + _coverage(res.kernel_path))]
 
 
 def _terms(lowered_compiled) -> dict:
@@ -52,4 +103,8 @@ def run() -> list[str]:
                    max(t2["compute_s"], t2["memory_s"]) * 1e6,
                    f"compute_ms={t2['compute_s']*1e3:.3f} "
                    f"mem_ms={t2['memory_s']*1e3:.3f} bound={dom2}"))
+
+    hg_small = generate.snn_smallworld(n_nodes=192, fanout=8, seed=5)
+    out += kernel_coverage_rows(hg_small, omega=24, delta=96)
+    out += gpu_mesh_rows(hg_small, omega=24, delta=96)
     return out

@@ -83,6 +83,11 @@ class Proposals:
         default_factory=lambda: jnp.int32(0))  # scalar
     n_nbr_entries: jax.Array = dataclasses.field(
         default_factory=lambda: jnp.int32(0))  # scalar
+    # 1 iff the use_kernels dispatch took the Pallas branch (0 on the
+    # segment path or with use_kernels=False) — surfaces silent fallbacks
+    # to tests/benchmarks via `PartitionResult.kernel_path`
+    kernel_path_taken: jax.Array = dataclasses.field(
+        default_factory=lambda: jnp.int32(0))  # scalar
 
 
 def score_slots(d: DeviceHypergraph, nbrs: Neighborhoods,
@@ -118,15 +123,21 @@ def score_slots(d: DeviceHypergraph, nbrs: Neighborhoods,
 def propose(d: DeviceHypergraph, nbrs: Neighborhoods, pairs: PairExpansion,
             caps: Caps, params: CoarsenParams,
             ctx: segops.ShardCtx = segops.ShardCtx()) -> Proposals:
-    if params.use_kernels and ctx.axis is None:
+    if params.use_kernels:
         from repro.kernels.pair_scores import ops as ps_ops
-        # tile bounds are level-0 derived; guard + fall back (see ops.py)
+        # tile bounds are level-0 derived; guard + fall back (see ops.py).
+        # The predicate is replicated and mesh-independent, so every shard
+        # takes the same branch and the branch matches the single-device
+        # run — required by the race=False parity contract.
+        fits = ps_ops.fits_kernel(d, nbrs, pairs, caps, ctx)
         eta, inter = jax.lax.cond(
-            ps_ops.fits_kernel(d, nbrs, pairs, caps),
-            lambda: ps_ops.score_slots_kernel(d, nbrs, pairs, caps),
-            lambda: score_slots(d, nbrs, pairs, caps))
+            fits,
+            lambda: ps_ops.score_slots_kernel(d, nbrs, pairs, caps, ctx),
+            lambda: score_slots(d, nbrs, pairs, caps, ctx))
+        kernel_taken = fits.astype(jnp.int32)
     else:
         eta, inter = score_slots(d, nbrs, pairs, caps, ctx)
+        kernel_taken = jnp.int32(0)
 
     owner = segops.rows_from_offsets(nbrs.off, caps.nbrs, caps.n)
     m = nbrs.ids
@@ -169,7 +180,8 @@ def propose(d: DeviceHypergraph, nbrs: Neighborhoods, pairs: PairExpansion,
 
     return Proposals(cand_ids=jnp.stack(cand_ids),
                      cand_scores=jnp.stack(cand_scores),
-                     eta=eta_n, inter=inter, valid_slot=valid_slot)
+                     eta=eta_n, inter=inter, valid_slot=valid_slot,
+                     kernel_path_taken=kernel_taken)
 
 
 def run_matching_rounds(props: Proposals, d: DeviceHypergraph, caps: Caps,

@@ -105,14 +105,16 @@ def partition_kway(hg: HostHypergraph, k: int, eps: float = 0.03,
     _coarsen, _contract = make_coarsen_fns(cparams, plan, dist_coarsen,
                                            compensated=compensated_psum)
     t_coarsen = time.perf_counter()
+    coarsen_hits: list = []
     while int(d.n_nodes) > coarse_target and len(gammas) < max_levels:
         match, n_pairs, ovf = _coarsen(d, caps)
         # one batched sync per level; audit before trusting the matches
-        pairs_live, nbr_entries, n_pairs_h = (
+        pairs_live, nbr_entries, kern_hit, n_pairs_h = (
             int(v) for v in jax.device_get([*ovf, n_pairs]))
         check_expansion_caps(caps, pairs_live, nbr_entries)
         if n_pairs_h == 0:
             break
+        coarsen_hits.append(kern_hit)
         d2, gamma = _contract(d, match, caps)
         if collect_log:
             log.append(dict(kind="coarsen", level=len(gammas),
@@ -146,17 +148,20 @@ def partition_kway(hg: HostHypergraph, k: int, eps: float = 0.03,
     rlog: list | None = [] if collect_log else None
     _refine = make_refine_fn(k, kcap, rparams, rlog, plan, race, race_seed)
 
-    parts = _refine(d, parts, caps, len(levels))
+    refine_hits_dev: dict = {}
+    parts, refine_hits_dev[len(levels)] = _refine(d, parts, caps, len(levels))
     for lvl in range(len(levels) - 1, -1, -1):
         g = gammas[lvl]
         d_lvl = levels[lvl]
         parts = jnp.where(jnp.arange(caps.n) < d_lvl.n_nodes,
                           parts[jnp.clip(g, 0, caps.n - 1)], 0)
-        parts = _refine(d_lvl, parts, caps, lvl)
+        parts, refine_hits_dev[lvl] = _refine(d_lvl, parts, caps, lvl)
     # block before reading the timer (the tail would otherwise drain in
     # np.asarray below, after the timer stopped)
     jax.block_until_ready(parts)
     t_refine = time.perf_counter() - t_refine
+    refine_hits = [int(v) for v in jax.device_get(
+        [refine_hits_dev[i] for i in range(len(levels) + 1)])]
 
     parts_np = np.asarray(parts)[: hg.n_nodes].astype(np.int64)
     aud = metrics.audit(hg, parts_np, omega=omega, delta=BIG_DELTA)
@@ -166,4 +171,5 @@ def partition_kway(hg: HostHypergraph, k: int, eps: float = 0.03,
         connectivity=aud["connectivity"], cut_net=aud["cut_net"], audit=aud,
         timings=dict(total=time.perf_counter() - t0, coarsen=t_coarsen,
                      refine=t_refine),
-        level_log=(log or []) + (rlog or []))
+        level_log=(log or []) + (rlog or []),
+        kernel_path=dict(coarsen=coarsen_hits, refine=refine_hits))

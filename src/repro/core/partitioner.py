@@ -40,6 +40,11 @@ class PartitionResult:
     audit: dict
     timings: dict
     level_log: list
+    # per-level Pallas dispatch coverage (empty when use_kernels=False):
+    #   "coarsen": [0/1 per coarsening level, finest first]
+    #   "refine":  [kernel reps (0..theta) per refined level, finest first;
+    #               the last entry is the coarsest level]
+    kernel_path: dict = dataclasses.field(default_factory=dict)
 
 
 def _next_pow2(x: int) -> int:
@@ -50,23 +55,25 @@ def make_coarsen_fns(cparams: CoarsenParams, plan, dist_coarsen: bool = True,
                      compensated: bool = False):
     """Per-level coarsening dispatchers shared by `partition` and
     `kway.partition_kway`: returns `(coarsen(d, caps) -> (match, n_pairs,
-    (n_pairs_live, n_nbr_entries)),
+    (n_pairs_live, n_nbr_entries, kernel_path_taken)),
     contract(d, match, caps) -> (d2, gamma))`. With a `Plan` (and
     `dist_coarsen`), both run on the mesh via `dist.partition.coarsen_level`
-    / `contract_level` — bit-exact with the single-device pair when
-    `use_kernels=False` (the mesh path replaces the Pallas kernels with the
-    striped pipeline, whose eta fp order differs from the kernel's).
-    ``compensated`` opts the eta / matching-sum0 float reductions into the
-    Neumaier-compensated psum (O(dense) traffic, ~1 ulp, not
-    bit-identical).
+    / `contract_level` — bit-exact with the single-device pair at matching
+    `use_kernels` (the mesh runs the Pallas kernels stripe-locally, and
+    the dispatch branch taken per level is mesh-independent — see
+    `repro.kernels`). ``compensated`` opts the eta / matching-sum0 float
+    reductions into the Neumaier-compensated psum (O(dense) traffic, ~1
+    ulp, not bit-identical).
 
     Both dispatchers return the same shapes in either mode; `_coarsen`'s
-    trailing ``(n_pairs_live, n_nbr_entries)`` pair feeds the drivers'
-    host-side capacity-overflow audit (`check_expansion_caps`)."""
+    trailing diagnostics feed the drivers' host-side capacity-overflow
+    audit (`check_expansion_caps`) and the per-level kernel-coverage
+    accounting (`PartitionResult.kernel_path`)."""
     if plan is None or not dist_coarsen:
         def _coarsen(d_, caps_):
             match, n_pairs, props = coarsen_step(d_, caps_, cparams)
-            return match, n_pairs, (props.n_pairs_live, props.n_nbr_entries)
+            return match, n_pairs, (props.n_pairs_live, props.n_nbr_entries,
+                                    props.kernel_path_taken)
 
         def _contract(d_, match_, caps_):
             return contract(d_, match_, caps_)
@@ -88,7 +95,9 @@ def make_refine_fn(k, kcap: int, rparams: RefineParams, rlog,
     `kway.partition_kway`: plain `refine_level` without a plan, the
     mesh-raced/sharded `dist.partition.refine_level` with one (seed offset
     by level so replica tie-break permutations decorrelate across levels).
-    Returns `fn(d, parts, caps, level) -> parts`."""
+    Returns `fn(d, parts, caps, level) -> (parts, kernel_hits)` — the
+    trailing device scalar counts the level's repetitions whose gains
+    dispatch took the Pallas branch."""
     if plan is None:
         def _refine(d_, parts_, caps_, lvl_):
             return refine_level(d_, parts_, k, caps_, kcap, rparams, rlog)
@@ -126,8 +135,8 @@ def partition(hg: HostHypergraph, omega: int, delta: int,
     plan (a `repro.dist.Plan`) routes the whole V-cycle onto the mesh:
     every coarsening level runs through `dist.partition.coarsen_level` /
     `contract_level` (pins/pairs pipelines sharded across the model axis,
-    bit-exact with the single-device `use_kernels=False` path — on-mesh the
-    Pallas kernels are replaced by the striped pipeline, as in refinement;
+    bit-exact with the single-device path at matching `use_kernels` — the
+    Pallas hot loops run stripe-locally on the mesh, see `repro.kernels`;
     `dist_coarsen=False` keeps coarsening single-device) and every
     refinement level through
     `dist.partition.refine_level`: repetitions race as replicas across the
@@ -183,17 +192,19 @@ def partition(hg: HostHypergraph, omega: int, delta: int,
     _coarsen, _contract = make_coarsen_fns(cparams, plan, dist_coarsen,
                                            compensated=compensated_psum)
     t_coarsen = time.perf_counter()
+    coarsen_hits: list = []
     while int(d.n_nodes) > target and len(gammas) < max_levels:
         match, n_pairs, ovf = _coarsen(d, caps)
-        # one batched sync for the level's three scalars, then audit
+        # one batched sync for the level's four scalars, then audit
         # BEFORE trusting the matches: the device pipelines drop
         # out-of-capacity lanes silently, so an undersized Caps must raise
         # here, not mis-partition
-        pairs_live, nbr_entries, n_pairs_h = (
+        pairs_live, nbr_entries, kern_hit, n_pairs_h = (
             int(v) for v in jax.device_get([*ovf, n_pairs]))
         check_expansion_caps(caps, pairs_live, nbr_entries)
         if n_pairs_h == 0:
             break
+        coarsen_hits.append(kern_hit)
         d2, gamma = _contract(d, match, caps)
         if collect_log:
             log.append(dict(kind="coarsen", level=len(gammas),
@@ -236,8 +247,10 @@ def partition(hg: HostHypergraph, omega: int, delta: int,
     rlog: list | None = [] if collect_log else None
     _refine = make_refine_fn(k, kcap, rparams, rlog, plan, race, race_seed)
 
-    # refine the coarsest level too, then every uncoarsened level
-    parts = _refine(d, parts, caps, len(levels))
+    # refine the coarsest level too, then every uncoarsened level; kernel
+    # hits stay device scalars until the single batched readback below
+    refine_hits_dev: dict = {}
+    parts, refine_hits_dev[len(levels)] = _refine(d, parts, caps, len(levels))
     for lvl in range(len(levels) - 1, -1, -1):
         g = gammas[lvl]
         d_lvl, caps_lvl = levels[lvl]
@@ -245,13 +258,15 @@ def partition(hg: HostHypergraph, omega: int, delta: int,
         parts = jnp.where(jnp.arange(caps_lvl.n) < d_lvl.n_nodes,
                           parts[jnp.clip(g[: caps_lvl.n], 0,
                                          coarse_cap - 1)], 0)
-        parts = _refine(d_lvl, parts, caps_lvl, lvl)
+        parts, refine_hits_dev[lvl] = _refine(d_lvl, parts, caps_lvl, lvl)
         if collect_log:
             log.append(dict(kind="refine", level=lvl))
     # block before reading the timer: the refine tail would otherwise
     # drain inside np.asarray(parts) below, after t_refine stopped
     jax.block_until_ready(parts)
     t_refine = time.perf_counter() - t_refine
+    refine_hits = [int(v) for v in jax.device_get(
+        [refine_hits_dev[i] for i in range(len(levels) + 1)])]
 
     parts_np = np.asarray(parts)[: hg.n_nodes].astype(np.int64)
     # compact partition ids (refinement may empty some partitions)
@@ -262,4 +277,5 @@ def partition(hg: HostHypergraph, omega: int, delta: int,
         connectivity=aud["connectivity"], cut_net=aud["cut_net"], audit=aud,
         timings=dict(total=time.perf_counter() - t0, coarsen=t_coarsen,
                      refine=t_refine),
-        level_log=(log or []) + (rlog or []))
+        level_log=(log or []) + (rlog or []),
+        kernel_path=dict(coarsen=coarsen_hits, refine=refine_hits))

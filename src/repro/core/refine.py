@@ -101,7 +101,9 @@ def propose_moves(d: DeviceHypergraph, parts: jax.Array, pins: jax.Array,
                   caps: Caps, kcap: int, params: RefineParams,
                   enforce_size: jax.Array, n_parts: jax.Array,
                   ctx: segops.ShardCtx = segops.ShardCtx()):
-    """Returns (move_to[Ncap] or -1, gain_iso[Ncap], saving[Ncap])."""
+    """Returns (move_to[Ncap] or -1, gain_iso[Ncap], saving[Ncap],
+    kernel_taken) — the trailing scalar is 1 iff the conn_w dispatch took
+    the Pallas `gains` branch (0 on the segment path)."""
     t, in_rng = ctx.lanes(caps.p)
     live = in_rng & (t < d.n_pins)
     n_of = ctx.rows(d.node_off, t, caps.p, caps.n)
@@ -125,14 +127,19 @@ def propose_moves(d: DeviceHypergraph, parts: jax.Array, pins: jax.Array,
             contrib, jnp.where(live, n_of, caps.n),
             num_segments=caps.n + 1)[: caps.n])
 
-    if params.use_kernels and ctx.axis is None:
+    if params.use_kernels:
         from repro.kernels.gains import ops as g_ops
+        # replicated mesh-independent predicate: every shard (and the
+        # single-device run) takes the same branch — see repro.kernels
+        fits = g_ops.fits_kernel(d, caps)
         conn_w = jax.lax.cond(
-            g_ops.fits_kernel(d, caps),
-            lambda: g_ops.conn_weights(d, parts, pins, caps, kcap),
+            fits,
+            lambda: g_ops.conn_weights(d, parts, pins, caps, kcap, ctx),
             _conn_segments)
+        kernel_taken = fits.astype(jnp.int32)
     else:
         conn_w = _conn_segments()
+        kernel_taken = jnp.int32(0)
 
     ids = jnp.arange(caps.n, dtype=jnp.int32)
     node_live = ids < d.n_nodes
@@ -152,7 +159,7 @@ def propose_moves(d: DeviceHypergraph, parts: jax.Array, pins: jax.Array,
     ok = node_live & (best_p >= 0) & ~jnp.isneginf(best_g)
     ok = ok & ((best_g >= 0.0) if params.include_zero_gain else (best_g > 0.0))
     move_to = jnp.where(ok, best_p.astype(jnp.int32), -1)
-    return move_to, jnp.where(ok, best_g, 0.0), saving
+    return move_to, jnp.where(ok, best_g, 0.0), saving, kernel_taken
 
 
 # ---------------------------------------------------------------------------
@@ -509,11 +516,14 @@ def refine_step_impl(d: DeviceHypergraph, parts: jax.Array,
     (``ctx`` shards the pins/pairs pipelines, ``tie_rank`` diversifies
     replicas)."""
     if params.use_kernels and ctx.axis is None:
+        # the pins kernel densifies the whole edge axis (no row striping
+        # yet), so it serves single-device runs and 1-device meshes; the
+        # sharded path keeps the stripe-local segment counting
         from repro.kernels.pins_count import ops as pc_ops
         pins, pins_in = pc_ops.pins_matrix_kernel(d, parts, caps, kcap)
     else:
         pins, pins_in = pins_matrix(d, parts, caps, kcap, ctx)
-    move_to, gain_iso, _ = propose_moves(
+    move_to, gain_iso, _, kernel_taken = propose_moves(
         d, parts, pins, caps, kcap, params, enforce_size, n_parts, ctx)
     seq, _ = build_sequence(d, parts, move_to, gain_iso, caps, kcap, params,
                             tie_rank=tie_rank, ctx=ctx)
@@ -523,7 +533,8 @@ def refine_step_impl(d: DeviceHypergraph, parts: jax.Array,
         d, parts, pins_in, move_to, seq, gain_seq, caps, kcap, params, ctx)
     parts_new = jnp.where(apply_mask, jnp.where(move_to >= 0, move_to, parts),
                           parts)
-    return parts_new, applied_gain, jnp.sum(apply_mask.astype(jnp.int32))
+    return (parts_new, applied_gain,
+            jnp.sum(apply_mask.astype(jnp.int32)), kernel_taken)
 
 
 @partial(jax.jit, static_argnames=("caps", "kcap", "params", "enforce_size"))
@@ -537,12 +548,17 @@ def refine_step(d: DeviceHypergraph, parts: jax.Array, n_parts: jax.Array,
 def refine_level(d: DeviceHypergraph, parts: jax.Array, n_parts,
                  caps: Caps, kcap: int, params: RefineParams,
                  log: list | None = None):
-    """Theta repetitions; first half may propose size-violating moves."""
+    """Theta repetitions; first half may propose size-violating moves.
+    Returns (parts, kernel_hits) — the device-scalar count of repetitions
+    whose gains dispatch took the Pallas branch (0..theta)."""
     n_parts = jnp.asarray(n_parts, jnp.int32)
+    hits = jnp.int32(0)
     for rep in range(params.theta):
         enforce = rep >= params.theta // 2
-        parts, g, nmv = refine_step(d, parts, n_parts, caps, kcap, params,
-                                    enforce)
+        parts, g, nmv, kt = refine_step(d, parts, n_parts, caps, kcap,
+                                        params, enforce)
+        hits = hits + kt
         if log is not None:
-            log.append(dict(rep=rep, gain=float(g), applied=int(nmv)))
-    return parts
+            log.append(dict(rep=rep, gain=float(g), applied=int(nmv),
+                            kernel=int(kt)))
+    return parts, hits

@@ -112,7 +112,6 @@ under 8 forced host devices on (2, 4) and (1, 8) meshes.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 
 import jax
@@ -183,10 +182,10 @@ def _build_step(mesh, data_axis: str, model_axis: str | None, nshards: int,
             tie_rank = jnp.where(r == 0, ids, perm)
         else:
             tie_rank = ids
-        parts_new, gain, nmv = refine_step_impl(
+        parts_new, gain, nmv, kt = refine_step_impl(
             d, parts, n_parts, caps, kcap, params, enforce, ctx, tie_rank)
         if data_axis is None:   # shard-only mesh: nothing to race
-            return parts_new, gain, nmv
+            return parts_new, gain, nmv, kt
         # race resolution: scalar gains all-gathered, winner's partition
         # vector broadcast by psum of the masked vector (no parts gather)
         gains = jax.lax.all_gather(gain, data_axis)        # [n_replicas]
@@ -194,11 +193,12 @@ def _build_step(mesh, data_axis: str, model_axis: str | None, nshards: int,
         win = jax.lax.axis_index(data_axis) == best
         parts_out = jax.lax.psum(jnp.where(win, parts_new, 0), data_axis)
         nmv_out = jax.lax.psum(jnp.where(win, nmv, 0), data_axis)
-        return parts_out, gains[best], nmv_out
+        kt_out = jax.lax.psum(jnp.where(win, kt, 0), data_axis)
+        return parts_out, gains[best], nmv_out, kt_out
 
     fn = common.shard_map(body, mesh=mesh,
                           in_specs=(graph_pspecs(striped), P(), P(), P(), P()),
-                          out_specs=(P(), P(), P()))
+                          out_specs=(P(), P(), P(), P()))
     return jax.jit(fn)
 
 
@@ -211,25 +211,31 @@ def refine_level(d, parts, n_parts, caps: Caps, kcap: int,
     identity tie-break — deterministic parity mode. ``d`` may be a
     replicated `DeviceHypergraph` or a memory-sharded
     `dist.graph.ShardedHypergraph` (racing replicas then share the one
-    striped copy of the pins arrays)."""
-    if params.use_kernels:
-        # Pallas kernels assume whole-array lanes; the sharded pipeline
-        # replaces them (they are the same segment reductions, striped)
-        params = dataclasses.replace(params, use_kernels=False)
+    striped copy of the pins arrays).
+
+    With ``use_kernels=True`` the gains/pins dispatches of
+    ``core.refine`` stay live on the mesh: the `gains` kernel runs
+    stripe-locally per shard (see `repro.kernels`), bit-identical to the
+    single-device kernel path. Returns ``(parts, kernel_hits)`` — the
+    device-scalar count of repetitions whose gains dispatch took the
+    Pallas branch (0..theta; mesh-independent by the branch-parity
+    invariant)."""
     d, striped = _graph_arg(d)
     data_axis, model_axis, nshards = plan_axes(plan)
     step = _build_step(plan.mesh, data_axis, model_axis, nshards,
                        caps, kcap, params, bool(race), striped)
     n_parts = jnp.asarray(n_parts, jnp.int32)
     key = jax.random.PRNGKey(seed)
+    hits = jnp.int32(0)
     for rep in range(params.theta):
         enforce = jnp.asarray(rep >= params.theta // 2)
-        parts, g, nmv = step(d, parts, n_parts,
-                             jax.random.fold_in(key, rep), enforce)
+        parts, g, nmv, kt = step(d, parts, n_parts,
+                                 jax.random.fold_in(key, rep), enforce)
+        hits = hits + kt
         if log is not None:
             log.append(dict(rep=rep, gain=float(g), applied=int(nmv),
-                            raced=bool(race)))
-    return parts
+                            raced=bool(race), kernel=int(kt)))
+    return parts, hits
 
 
 @functools.lru_cache(maxsize=None)
@@ -246,10 +252,11 @@ def _build_coarsen_step(mesh, model_axis: str | None, nshards: int,
 
     def body(d):
         match, n_pairs, props = coarsen_step_impl(d, caps, cparams, ctx)
-        return match, n_pairs, props.n_pairs_live, props.n_nbr_entries
+        return (match, n_pairs, props.n_pairs_live, props.n_nbr_entries,
+                props.kernel_path_taken)
 
     fn = common.shard_map(body, mesh=mesh, in_specs=(graph_pspecs(striped),),
-                          out_specs=(P(), P(), P(), P()))
+                          out_specs=(P(), P(), P(), P(), P()))
     return jax.jit(fn)
 
 
@@ -282,25 +289,26 @@ def coarsen_level(d, caps: Caps, cparams: CoarsenParams, plan: Plan,
     Neumaier-compensated psum (within ~1 ulp of the true sum) instead of
     gathering their lane columns in stripe order.
 
-    Caveat (same as `refine_level`): with `use_kernels=True` the Pallas
-    kernel path is replaced by the striped segment pipeline, whose eta sums
-    in a different fp order than the kernel — so bit-exact parity with the
-    single-device run is only guaranteed against its `use_kernels=False`
-    path.
+    With `use_kernels=True` the `pair_scores` dispatch of `coarsen.propose`
+    stays live on the mesh: the kernel runs stripe-locally per shard and
+    its per-row output is bit-identical to the single-device kernel path
+    (see `repro.kernels` for the dispatch contract), so sharded-vs-single
+    parity holds kernels-on against kernels-on. (Kernel eta sums in a
+    different fp order than the segment pipeline, so kernels-on vs
+    kernels-off remains an fp-tolerance comparison — same as on one
+    device.)
 
-    Returns ``(match, n_matched_pairs, (n_pairs_live, n_nbr_entries))`` —
-    the trailing pair feeds the drivers' host-side capacity-overflow audit
-    (`core.hypergraph.check_expansion_caps`)."""
-    if cparams.use_kernels:
-        # Pallas kernels assume whole-array lanes; the sharded pipeline
-        # replaces them (same segment reductions, striped)
-        cparams = dataclasses.replace(cparams, use_kernels=False)
+    Returns ``(match, n_matched_pairs, (n_pairs_live, n_nbr_entries,
+    kernel_path_taken))`` — the first two diagnostics feed the drivers'
+    host-side capacity-overflow audit
+    (`core.hypergraph.check_expansion_caps`); the trailing flag is 1 iff
+    the pair_scores dispatch took the Pallas branch at this level."""
     d, striped = _graph_arg(d)
     _, model_axis, nshards = plan_axes(plan)
     step = _build_coarsen_step(plan.mesh, model_axis, nshards, caps, cparams,
                                bool(compensated), striped)
-    match, n_pairs, pairs_live, nbr_entries = step(d)
-    return match, n_pairs, (pairs_live, nbr_entries)
+    match, n_pairs, pairs_live, nbr_entries, kernel_hit = step(d)
+    return match, n_pairs, (pairs_live, nbr_entries, kernel_hit)
 
 
 def contract_level(d, match, caps: Caps, plan: Plan):

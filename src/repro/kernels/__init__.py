@@ -25,4 +25,80 @@ Each subpackage ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper + padding/layout glue) and ref.py (pure-jnp oracle). All kernels
 validate in interpret mode on CPU; tests sweep shapes and dtypes against
 the oracles.
+
+Dispatch contract
+-----------------
+
+The kernels are *routed*, never called unconditionally. With
+``use_kernels=True`` the hot-loop call sites (``coarsen.propose`` for
+``pair_scores``, ``refine.propose_moves`` for ``gains``,
+``refine.refine_step_impl`` for ``pins_count``) dispatch through a runtime
+``fits_kernel`` predicate under ``lax.cond``:
+
+* **kernel branch** — taken when every node's live extent fits the static
+  tile bounds (``tile_bounds`` / ``h_bound``, derived from the level-0
+  ``Caps`` statistics, clamped by the capacity caps). Tile bounds are not
+  monotone under coarsening (merged nodes union their neighborhoods), so
+  coarse levels may legitimately outgrow them.
+* **fallback branch** — the pure-XLA segment pipeline
+  (``coarsen.score_slots`` / the ``_conn_segments`` closure), bit-identical
+  to the ``use_kernels=False`` path. Falling back is silent at the
+  arithmetic level but *not* at the accounting level: every dispatch
+  reports a ``kernel_path_taken`` flag (the cond predicate as int32),
+  aggregated per level into ``PartitionResult.kernel_path`` so tests and
+  benchmarks assert coverage instead of trusting the routing.
+
+Sharded mode: the ``pair_scores`` and ``gains`` wrappers accept a
+``segops.ShardCtx`` and then run *stripe-locally* under ``shard_map`` —
+each shard builds dense tiles only for its contiguous row stripe of the
+node axis, runs the kernel on its tile, and the row stripes concatenate in
+shard order (``ctx.gather`` — disjoint rows, so the combine is exact for
+floats and ints alike). Per-row kernel arithmetic is independent of the
+tile height and identical across mesh shapes, so the sharded kernel output
+is bit-identical to the single-device kernel output. The ``fits_kernel``
+predicates combine per-stripe counts with integer psums and use the *same*
+static bounds on every mesh shape, so the cond branch taken at a given
+level is mesh-independent — the invariant the ``race=False`` bit-exact
+parity contract of ``dist.partition`` relies on.
+
+Interpret policy
+----------------
+
+``pallas_interpret()`` below decides compiled-vs-interpret per trace:
+compiled on any accelerator backend (TPU/GPU), interpret only when no
+accelerator is present (CPU has no compiled Pallas path). The
+``REPRO_PALLAS_INTERPRET`` env var overrides: ``1`` forces interpret
+everywhere (debugging on accelerators), ``0`` asserts the compiled path on
+accelerators and is a documented no-op on CPU. The policy is read at trace
+time, so flip it before the first kernel call of a process (jit caches
+traces).
 """
+from __future__ import annotations
+
+import os
+
+import jax
+
+_ACCEL_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
+def pallas_interpret() -> bool:
+    """Whether pallas_call should run in interpret mode for this process.
+
+    Default: interpret only when no accelerator backend is present —
+    ``jax.default_backend()`` in ``("tpu", "gpu", "cuda", "rocm")`` compiles
+    (the old ``backend != "tpu"`` policy silently paid interpret-mode
+    overhead on every GPU kernel call). ``REPRO_PALLAS_INTERPRET=1`` forces
+    interpret mode everywhere; ``=0`` requests the compiled path, which on
+    CPU still degrades to interpret (jax raises "Only interpret mode is
+    supported on CPU backend" otherwise), so host CI can exercise both
+    override values safely. Evaluated at trace time — set the env var
+    before the first kernel call of the process.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "")
+    accel = jax.default_backend() in _ACCEL_BACKENDS
+    if env not in ("", None):
+        if env in ("0", "false", "False"):
+            return not accel  # CPU has no compiled Pallas path
+        return True
+    return not accel

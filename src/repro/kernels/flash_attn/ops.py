@@ -1,12 +1,10 @@
 """GQA-aware wrapper: [B,S,H,Dh] x [B,S,KV,Dh] -> kernel MHA layout."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels import pallas_interpret
 from repro.kernels.flash_attn.kernel import flash_attention_pallas
-
-INTERPRET = jax.default_backend() != "tpu"
 
 
 def flash_attention_gqa(q, k, v, *, causal: bool = True, qc: int = 128,
@@ -21,5 +19,5 @@ def flash_attention_gqa(q, k, v, *, causal: bool = True, qc: int = 128,
     km = jnp.transpose(krep, (0, 2, 1, 3)).reshape(b * h, s, dh)
     vm = jnp.transpose(vrep, (0, 2, 1, 3)).reshape(b * h, s, dh)
     out = flash_attention_pallas(qm, km, vm, causal=causal, qc=qc, kc=kc,
-                                 scale=scale, interpret=INTERPRET)
+                                 scale=scale, interpret=pallas_interpret())
     return jnp.transpose(out.reshape(b, h, s, dh), (0, 2, 1, 3))

@@ -1,8 +1,17 @@
 """jit'd wrapper: node incidence CSR + pins matrix -> gains kernel.
 
 Drop-in for the conn_w computation in `refine.propose_moves`. The incidence
-tile bound H comes from level-0 Caps (same fallback contract as
-pair_scores/ops.py).
+tile bound H comes from level-0 Caps clamped by the capacity caps (same
+fallback contract as pair_scores/ops.py).
+
+Sharded mode (``ctx.axis`` set): the incidence scatter runs over this
+shard's pin-lane stripe (``ctx.lanes``/``gread`` — ``node_edges`` may be
+striped storage), the disjoint integer scatters psum into the replicated
+dense incidence tile, and each shard runs the kernel only on its contiguous
+``rows_per`` row block of the node axis; the per-shard conn row tiles
+concatenate in shard order (``ctx.gather`` — disjoint rows, exact for
+floats). Per-row kernel arithmetic is independent of tile height, so the
+sharded output is bit-identical to the single-device kernel output.
 """
 from __future__ import annotations
 
@@ -10,44 +19,60 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hypergraph import Caps, DeviceHypergraph
-from repro.utils import segops
+from repro.kernels import pallas_interpret
 from repro.kernels.gains.kernel import gains_pallas
-
-INTERPRET = jax.default_backend() != "tpu"
-
-
-def _round_up(x: int, m: int) -> int:
-    return ((max(x, 1) + m - 1) // m) * m
+from repro.utils import segops
 
 
 def h_bound(caps: Caps) -> int:
-    return _round_up(caps.h0, 8)
+    """Static incidence tile width: the level-0 max node degree rounded up
+    to the 8-row tile, clamped by the pin capacity (a node can never be
+    incident to more slots than ``caps.p`` pin lanes). Mesh-independent by
+    design — see the dispatch contract in ``repro.kernels``."""
+    return min(segops.round_up(caps.h0, 8), segops.round_up(caps.p, 8))
+
+
+def stripe_rows(caps: Caps, nshards: int) -> int:
+    """Node rows per shard tile (ceil-divided stripe, 8-row multiple)."""
+    return segops.round_up(-(-caps.n // max(nshards, 1)), 8)
 
 
 def fits_kernel(d: DeviceHypergraph, caps: Caps) -> jax.Array:
+    """Runtime predicate: every node's incidence degree fits ``h_bound``.
+    ``node_off`` is replicated even under a mesh, so no combine is needed
+    and the result is a valid uniform `lax.cond` predicate."""
     deg = d.node_off[1:] - d.node_off[:-1]
     ids = jnp.arange(caps.n)
     return jnp.max(jnp.where(ids < d.n_nodes, deg, 0)) <= h_bound(caps)
 
 
 def conn_weights(d: DeviceHypergraph, parts: jax.Array, pins: jax.Array,
-                 caps: Caps, kcap: int):
-    """conn_w[n, p] = sum_{e in I(n)} w(e) * [pins(p, e) > 0], [Ncap, kcap]."""
+                 caps: Caps, kcap: int,
+                 ctx: segops.ShardCtx = segops.ShardCtx()):
+    """conn_w[n, p] = sum_{e in I(n)} w(e) * [pins(p, e) > 0], [Ncap, kcap]
+    (stripe-local on a mesh; see module docstring)."""
     H = h_bound(caps)
-    npad = _round_up(caps.n, 8)
-    t = jnp.arange(caps.p, dtype=jnp.int32)
-    live = t < d.n_pins
-    n_of = segops.rows_from_offsets(d.node_off, caps.p, caps.n)
+    rows_per = stripe_rows(caps, ctx.nshards)
+    nrows = rows_per * max(ctx.nshards, 1)
+    t, t_ok = ctx.lanes(caps.p)
+    live = t_ok & (t < d.n_pins)
+    n_of = ctx.rows(d.node_off, t, caps.p, caps.n)
     n_safe = jnp.clip(n_of, 0, caps.n - 1)
     rank = t - d.node_off[n_safe]
     ok = live & (n_of < caps.n) & (rank < H)
-    pos = jnp.where(ok, n_safe * H + rank, npad * H)
-    e_ids = jnp.clip(d.node_edges, 0, caps.e - 1)
-    inc = jnp.zeros((npad * H + 1,), jnp.int32).at[pos].set(
-        e_ids, mode="drop")[:-1]
-    w = jnp.zeros((npad * H + 1,), jnp.float32).at[pos].set(
-        jnp.where(live, d.edge_w[e_ids], 0.0), mode="drop")[:-1]
-    w = w.reshape(npad, H)
+    pos = jnp.where(ok, n_safe * H + rank, nrows * H)
+    e_ids = jnp.clip(ctx.gread(d.node_edges, t, live, 0), 0, caps.e - 1)
+    # disjoint integer scatters (each global pin lane lives on exactly one
+    # shard) -> the psum combine is exact; the float weight column is then
+    # gathered replicated from the combined incidence, never psum'd
+    inc = ctx.psum(jnp.zeros((nrows * H + 1,), jnp.int32).at[pos].set(
+        e_ids, mode="drop")[:-1])
+    flag = ctx.psum(jnp.zeros((nrows * H + 1,), jnp.int32).at[pos].set(
+        jnp.where(ok, 1, 0), mode="drop")[:-1])
+    w = jnp.where(flag > 0, d.edge_w[inc], 0.0)
+    inc_own = ctx.stripe(inc.reshape(nrows, H)).reshape(-1)
+    w_own = ctx.stripe(w.reshape(nrows, H))
     pins_nz = (pins > 0).astype(jnp.float32).T  # [Ecap, kcap]
-    conn = gains_pallas(inc, w, pins_nz, h=H, interpret=INTERPRET)
-    return conn[: caps.n]
+    conn_tile = gains_pallas(inc_own, w_own, pins_nz, h=H,
+                             interpret=pallas_interpret())
+    return ctx.gather(conn_tile)[: caps.n]

@@ -2,11 +2,28 @@
 
 Returns (eta, inter) in *slot space* ([NBcap]) so `coarsen.propose` can use
 it as a drop-in for the segment-sum path. Tile bounds (U = unique neighbors
-per node, L = per-node traversal length) come from the level-0 Caps; they
-are not guaranteed monotone under coarsening (two merged nodes can union
-their neighborhoods), so the caller guards with a runtime `fits` predicate
-and lax.cond-falls back to the segment path — on real inputs coarse levels
-shrink and the kernel path keeps being taken (asserted in tests).
+per node, L = per-node traversal length) come from the level-0 Caps clamped
+by the capacity caps; they are not guaranteed monotone under coarsening
+(two merged nodes can union their neighborhoods), so the caller guards with
+the runtime `fits_kernel` predicate and lax.cond-falls back to the segment
+path — on real inputs coarse levels shrink and the kernel path keeps being
+taken (asserted via the `kernel_path_taken` counter in tests).
+
+Sharded mode (``ctx.axis`` set, inside ``dist.partition``'s shard_map):
+``pairs`` is this shard's contiguous lane stripe of the pair expansion.
+The wrapper then runs *stripe-locally over node rows*: the global traversal
+order comes from the distributed sample sort (``ctx.sort_by`` — only
+splitter samples gathered, bit-identical to the gathered stable sort), each
+shard scatters only its contiguous ``rows_per`` row stripe of the node axis
+into ``[rows_per, U]`` / ``[rows_per, L]`` tiles, runs the Pallas kernel on
+its tile, and the per-shard (eta, inter) row tiles concatenate in shard
+order (``ctx.gather`` — disjoint rows, exact for floats and ints alike).
+Per-row kernel arithmetic is independent of tile height and the L-chunk
+boundaries (lc) are mesh-independent, so the sharded kernel output is
+bit-identical to the single-device kernel output. ``fits_kernel`` combines
+per-stripe traversal counts with an integer psum and evaluates the *same*
+static bounds on every mesh shape, so the dispatch branch taken at a level
+is mesh-independent — required by the `race=False` parity contract.
 """
 from __future__ import annotations
 
@@ -16,10 +33,10 @@ import numpy as np
 
 from repro.core.hypergraph import (Caps, DeviceHypergraph, Neighborhoods,
                                    PairExpansion, NSENT)
-from repro.utils import segops
+from repro.kernels import pallas_interpret
 from repro.kernels.pair_scores.kernel import pair_scores_pallas
+from repro.utils import segops
 
-INTERPRET = jax.default_backend() != "tpu"
 # plain numpy scalars: this module is lazily imported inside jitted callers
 # (`coarsen.propose`'s use_kernels branch), and a module-level jnp constant
 # created during that trace would be a leaked tracer for every later
@@ -28,73 +45,117 @@ NBR_PAD = np.int32(-1)
 TRAV_PAD = np.int32(-2)
 
 
-def _round_up(x: int, m: int) -> int:
-    return ((max(x, 1) + m - 1) // m) * m
-
-
 def tile_bounds(caps: Caps) -> tuple[int, int]:
-    u = _round_up(caps.u0, 128)
-    l = _round_up(caps.l0, 128)
+    """(U, L) static tile bounds: the level-0 per-node maxima rounded up to
+    the 128-lane tile, clamped by the capacity caps (a node can never have
+    more unique neighbors than `caps.nbrs` slots or more traversal entries
+    than `caps.pairs` lanes). Identical on every mesh shape by design — the
+    dispatch predicate must take the same branch single-device and
+    sharded."""
+    u = min(segops.round_up(caps.u0, 128), segops.round_up(caps.nbrs, 128))
+    l = min(segops.round_up(caps.l0, 128), segops.round_up(caps.pairs, 128))
     return u, l
 
 
+def stripe_rows(caps: Caps, nshards: int) -> int:
+    """Rows of the node axis each shard's tile holds: ceil-divided stripe,
+    rounded up to the kernel's row-tile multiple (tn = 8). With one shard
+    this is the full padded row count."""
+    return segops.round_up(-(-caps.n // max(nshards, 1)), 8)
+
+
 def fits_kernel(d: DeviceHypergraph, nbrs: Neighborhoods,
-                pairs: PairExpansion, caps: Caps) -> jax.Array:
-    """Runtime predicate: every node's U/L within the level-0 tile bounds."""
+                pairs: PairExpansion, caps: Caps,
+                ctx: segops.ShardCtx = segops.ShardCtx()) -> jax.Array:
+    """Runtime predicate: every node's U/L within the static tile bounds.
+
+    Sharded mode: ``pairs`` is one lane stripe and a node's pair entries
+    span stripes, so the per-stripe traversal counts MUST psum before the
+    max — a per-shard max would undercount and admit rows that overflow the
+    tile (silently wrong eta). The result is replicated, making it a valid
+    uniform `lax.cond` predicate under shard_map."""
     u_bound, l_bound = tile_bounds(caps)
     ucnt = nbrs.off[1:] - nbrs.off[:-1]
-    lcnt = jax.ops.segment_sum(
+    lcnt = ctx.psum(jax.ops.segment_sum(
         pairs.valid.astype(jnp.int32),
         jnp.where(pairs.valid, jnp.clip(pairs.n, 0, caps.n - 1), caps.n),
-        num_segments=caps.n + 1)[: caps.n]
+        num_segments=caps.n + 1))[: caps.n]
     return (jnp.max(ucnt) <= u_bound) & (jnp.max(lcnt) <= l_bound)
 
 
 def score_slots_kernel(d: DeviceHypergraph, nbrs: Neighborhoods,
-                       pairs: PairExpansion, caps: Caps):
-    """(eta[NBcap], inter[NBcap]) via the Pallas kernel."""
+                       pairs: PairExpansion, caps: Caps,
+                       ctx: segops.ShardCtx = segops.ShardCtx()):
+    """(eta[NBcap], inter[NBcap]) via the Pallas kernel (stripe-local on a
+    mesh; see module docstring for the bit-exactness argument)."""
     U, L = tile_bounds(caps)
-    npad = _round_up(caps.n, 8)
+    rows_per = stripe_rows(caps, ctx.nshards)
+    nrows = rows_per * max(ctx.nshards, 1)      # padded global row space
+    row_lo = ctx.index() * rows_per
 
-    # dense unique-neighbor slots [npad, U]
+    # dense unique-neighbor slots for this shard's row stripe [rows_per, U]
+    # (nbrs is replicated — build_neighbors psums its dense arrays)
     owner = segops.rows_from_offsets(nbrs.off, caps.nbrs, caps.n)
     owner_safe = jnp.clip(owner, 0, caps.n - 1)
     s = jnp.arange(caps.nbrs, dtype=jnp.int32)
     rank_u = s - nbrs.off[owner_safe]
     live_u = (nbrs.ids != NSENT) & (owner < caps.n) & (rank_u < U)
-    pos_u = jnp.where(live_u, owner_safe * U + rank_u, npad * U)
-    nbr_dense = jnp.full((npad * U + 1,), NBR_PAD, jnp.int32)
+    row_rel = owner_safe - row_lo
+    mine_u = live_u & (row_rel >= 0) & (row_rel < rows_per)
+    pos_u = jnp.where(mine_u, row_rel * U + rank_u, rows_per * U)
+    nbr_dense = jnp.full((rows_per * U + 1,), NBR_PAD, jnp.int32)
     nbr_dense = nbr_dense.at[pos_u].set(nbrs.ids, mode="drop")[:-1]
-    nbr_dense = nbr_dense.reshape(npad, U)
+    nbr_dense = nbr_dense.reshape(rows_per, U)
 
-    # dense traversal [npad, L] (rank via stable sort of pair entries by n)
+    # traversal in global (node, lane) order. Single device: stable sort by
+    # (n, lane). Mesh: the distributed sample sort over the lane stripes,
+    # replicated out — its global-rank tie key reproduces exactly the same
+    # stable order, with invalid lanes (pn = NSENT) sorted past every live
+    # entry in both layouts, so the live prefix is bit-identical.
     pn = jnp.where(pairs.valid, pairs.n, NSENT)
-    t = jnp.arange(caps.pairs, dtype=jnp.int32)
-    (_, _), (perm,) = segops.sort_by([pn, t], [t])
-    sn = pn[perm]
+    dst = pairs.both_dst.astype(jnp.int32)
+    if ctx.axis is None:
+        t = jnp.arange(caps.pairs, dtype=jnp.int32)
+        (sn, _), (m_s, w_s, dd_s) = segops.sort_by(
+            [pn, t], [pairs.m, pairs.w_norm, dst])
+    else:
+        (sn,), (m_s, w_s, dd_s) = ctx.sort_by(
+            [pn], [pairs.m, pairs.w_norm, dst],
+            striped_in=True, striped_out=False)
+
+    total = sn.shape[0]
+    t2 = jnp.arange(total, dtype=jnp.int32)
+    sn_safe = jnp.clip(sn, 0, caps.n - 1)
     cnts = jax.ops.segment_sum(
-        jnp.ones((caps.pairs,), jnp.int32),
-        jnp.where(sn == NSENT, caps.n, jnp.clip(sn, 0, caps.n - 1)),
+        jnp.ones((total,), jnp.int32),
+        jnp.where(sn == NSENT, caps.n, sn_safe),
         num_segments=caps.n + 1)[: caps.n]
     starts = segops.offsets_from_counts(cnts)[:-1]
-    rank_l = t - starts[jnp.clip(sn, 0, caps.n - 1)]
+    rank_l = t2 - starts[sn_safe]
+    row_rel_l = sn_safe - row_lo
     live_l = (sn != NSENT) & (rank_l < L)
-    pos_l = jnp.where(live_l, jnp.clip(sn, 0, caps.n - 1) * L + rank_l,
-                      npad * L)
+    mine_l = live_l & (row_rel_l >= 0) & (row_rel_l < rows_per)
+    pos_l = jnp.where(mine_l, row_rel_l * L + rank_l, rows_per * L)
+
     def scatter(vals, fill, dtype):
-        out = jnp.full((npad * L + 1,), fill, dtype)
-        return out.at[pos_l].set(vals[perm].astype(dtype),
-                                 mode="drop")[:-1].reshape(npad, L)
+        out = jnp.full((rows_per * L + 1,), fill, dtype)
+        return out.at[pos_l].set(vals.astype(dtype),
+                                 mode="drop")[:-1].reshape(rows_per, L)
 
-    m_dense = scatter(pairs.m, TRAV_PAD, jnp.int32)
-    w_dense = scatter(pairs.w_norm, 0.0, jnp.float32)
-    d_dense = scatter(pairs.both_dst.astype(jnp.int32), 0, jnp.int32)
+    m_dense = scatter(m_s, TRAV_PAD, jnp.int32)
+    w_dense = scatter(w_s, 0.0, jnp.float32)
+    d_dense = scatter(dd_s, 0, jnp.int32)
 
-    eta_dense, inter_dense = pair_scores_pallas(
+    eta_tile, inter_tile = pair_scores_pallas(
         nbr_dense, m_dense, w_dense, d_dense, tn=8,
-        lc=min(128, L), interpret=INTERPRET)
+        lc=min(128, L), interpret=pallas_interpret())
 
-    # back to slot space
+    # row stripes are disjoint: shard-order concat is the exact combine for
+    # the float eta tiles and the int inter tiles alike
+    eta_dense = ctx.gather(eta_tile)            # [nrows, U]
+    inter_dense = ctx.gather(inter_tile)
+
+    # back to slot space (replicated; owner_safe < caps.n <= nrows)
     gidx = jnp.where(live_u, owner_safe * U + rank_u, 0)
     eta = jnp.where(live_u, eta_dense.reshape(-1)[gidx], 0.0)
     inter = jnp.where(live_u, inter_dense.reshape(-1)[gidx], 0)

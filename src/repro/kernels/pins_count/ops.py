@@ -14,14 +14,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hypergraph import Caps, DeviceHypergraph
-from repro.utils import segops
+from repro.kernels import pallas_interpret
 from repro.kernels.pins_count.kernel import pins_count_pallas
-
-INTERPRET = jax.default_backend() != "tpu"
-
-
-def _round_up(x: int, m: int) -> int:
-    return ((max(x, 1) + m - 1) // m) * m
+from repro.utils import segops
 
 
 def densify_edges(d: DeviceHypergraph, parts: jax.Array, caps: Caps,
@@ -35,7 +30,7 @@ def densify_edges(d: DeviceHypergraph, parts: jax.Array, caps: Caps,
     pin = jnp.clip(d.edge_pins, 0, caps.n - 1)
     p_of = parts[pin]
     is_dst = live & (rel >= d.edge_nsrc[e_safe])
-    epad = _round_up(caps.e, 8)
+    epad = segops.round_up(caps.e, 8)
     flat_pos = jnp.where(live & (rel < dbar), e_safe * dbar + rel,
                          epad * dbar)
     parts_dense = jnp.full((epad * dbar + 1,), kcap, jnp.int32)
@@ -52,12 +47,13 @@ def densify_edges(d: DeviceHypergraph, parts: jax.Array, caps: Caps,
 def pins_matrix_kernel(d: DeviceHypergraph, parts: jax.Array, caps: Caps,
                        kcap: int):
     """Drop-in replacement for refine.pins_matrix via the Pallas kernel."""
-    dc = min(128, _round_up(caps.d_max, 8))
-    dbar = _round_up(caps.d_max, dc)
+    dc = min(128, segops.round_up(caps.d_max, 8))
+    dbar = segops.round_up(caps.d_max, dc)
     parts_dense, dst_dense = densify_edges(d, parts, caps, kcap, dbar)
     kdim = max(kcap, 8)
     pins, pins_in = pins_count_pallas(parts_dense, dst_dense, kdim,
-                                      te=8, dc=dc, interpret=INTERPRET)
+                                      te=8, dc=dc,
+                                      interpret=pallas_interpret())
     pins = pins[: caps.e, :kcap].T
     pins_in = pins_in[: caps.e, :kcap].T
     return pins, pins_in

@@ -62,6 +62,12 @@ def main(argv=None):
                          "reductions with the Neumaier-compensated psum "
                          "(O(dense) traffic, ~1 ulp; drops bit-exact parity "
                          "with the single-device run)")
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="dispatch the pair-scores / gains / pins-count hot "
+                         "loops through the Pallas kernels where the "
+                         "fits_kernel bounds allow (stripe-local under a "
+                         "mesh); the per-level outcome is reported as "
+                         "kernel_path in the output")
     ap.add_argument("--race-seed", type=int, default=0)
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
@@ -88,13 +94,15 @@ def main(argv=None):
                     race_seed=args.race_seed,
                     dist_coarsen=not args.single_coarsen,
                     compensated_psum=args.compensated_psum,
-                    shard_graph=args.shard_graph)
+                    shard_graph=args.shard_graph,
+                    use_kernels=args.use_kernels)
     out = dict(
         connectivity=res.connectivity, cut_net=res.cut_net,
         n_parts=res.n_parts, n_levels=res.n_levels,
         size_ok=bool(res.audit["size_ok"]),
         inbound_ok=bool(res.audit["inbound_ok"]),
         timings=res.timings,
+        kernel_path=res.kernel_path if args.use_kernels else None,
         mesh=(dict(plan.mesh.shape) if plan is not None else None),
         race=(not args.no_race) if plan is not None else None,
         dist_coarsen=(not args.single_coarsen) if plan is not None else None,

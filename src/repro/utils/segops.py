@@ -43,6 +43,13 @@ import jax.numpy as jnp
 INT_SENTINEL = jnp.int32(2**31 - 1)
 
 
+def round_up(x: int, m: int) -> int:
+    """Smallest multiple of ``m`` >= max(x, 1) — the static tile/pad-size
+    helper shared by the Pallas kernel wrappers (``kernels/*/ops.py``) and
+    the stripe-tile layouts."""
+    return ((max(x, 1) + m - 1) // m) * m
+
+
 @dataclasses.dataclass(frozen=True)
 class ShardCtx:
     """Mesh-axis shard context for segment pipelines under ``shard_map``.

@@ -116,7 +116,7 @@ def test_build_sequence_properties(n, e, k, kparts, seed, rank_seed):
     parts = jnp.asarray(np.pad(parts0, (0, caps.n - hg.n_nodes)))
     params = R.RefineParams(omega=max(3, n // 2), delta=4 * e)
     pins, _ = R.pins_matrix(d, parts, caps, kcap)
-    move_to, gain_iso, _ = R.propose_moves(
+    move_to, gain_iso, _, _ = R.propose_moves(
         d, parts, pins, caps, kcap, params, jnp.asarray(False),
         jnp.int32(kparts))
     tie_rank = None

@@ -39,7 +39,7 @@ def test_pins_matrix_oracle():
 def test_isolation_gains_match_connectivity_delta():
     hg, caps, d, parts0, parts, params, K, kcap = _setup(1)
     pins, _ = R.pins_matrix(d, parts, caps, kcap)
-    move_to, gain_iso, _ = R.propose_moves(
+    move_to, gain_iso, _, _ = R.propose_moves(
         d, parts, pins, caps, kcap, params, jnp.asarray(False), jnp.int32(K))
     mv, gi = np.asarray(move_to), np.asarray(gain_iso)
     conn0 = metrics.connectivity(hg, parts0)
@@ -52,7 +52,7 @@ def test_isolation_gains_match_connectivity_delta():
 
 def _sequence(hg, caps, d, parts0, parts, params, K, kcap):
     pins, pins_in = R.pins_matrix(d, parts, caps, kcap)
-    move_to, gain_iso, _ = R.propose_moves(
+    move_to, gain_iso, _, _ = R.propose_moves(
         d, parts, pins, caps, kcap, params, jnp.asarray(False), jnp.int32(K))
     seq, _ = R.build_sequence(d, parts, move_to, gain_iso, caps, kcap, params)
     gain_seq = R.inseq_gains(d, parts, pins, move_to, gain_iso, seq, caps,
@@ -152,8 +152,8 @@ def test_refine_step_monotone_and_valid():
     conn0 = metrics.connectivity(hg, parts0)
     p = parts
     for rep in range(3):
-        p, g, nmv = R.refine_step(d, p, jnp.int32(K), caps, kcap, params,
-                                  enforce_size=True)
+        p, g, nmv, _ = R.refine_step(d, p, jnp.int32(K), caps, kcap, params,
+                                     enforce_size=True)
     parts1 = np.asarray(p)[: hg.n_nodes]
     conn1 = metrics.connectivity(hg, parts1)
     assert conn1 <= conn0 + 1e-6

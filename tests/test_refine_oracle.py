@@ -207,7 +207,7 @@ def test_build_sequence_invariants_seeded(seed):
     parts = jnp.asarray(np.pad(parts0, (0, caps.n - hg.n_nodes)))
     params = R.RefineParams(omega=9, delta=35)
     pins, _ = R.pins_matrix(d, parts, caps, kcap)
-    move_to, gain_iso, _ = R.propose_moves(
+    move_to, gain_iso, _, _ = R.propose_moves(
         d, parts, pins, caps, kcap, params, jnp.asarray(False), jnp.int32(K))
     seq, n_movers, aux = R.build_sequence(
         d, parts, move_to, gain_iso, caps, kcap, params, with_aux=True)
