@@ -13,12 +13,13 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig7,fig8,fig15,fig16,tab2,roofline,"
-                         "proofline,dist,dist_sort")
+                         "proofline,dist,dist_sort,serve_engine")
     args = ap.parse_args(argv)
 
     from benchmarks import (dist_scaling, dist_sort, fig7_snn_comparison,
                             fig8_breakdown, fig15_kway, fig16_ablations,
-                            partitioner_roofline, roofline, tab2_work_span)
+                            partitioner_roofline, roofline, serve_engine,
+                            tab2_work_span)
     mods = {
         "fig7": fig7_snn_comparison,
         "fig8": fig8_breakdown,
@@ -29,6 +30,7 @@ def main(argv=None) -> None:
         "proofline": partitioner_roofline,
         "dist": dist_scaling,
         "dist_sort": dist_sort,
+        "serve_engine": serve_engine,
     }
     want = args.only.split(",") if args.only else list(mods)
     print("name,us_per_call,derived")

@@ -1,0 +1,79 @@
+"""Serving throughput: static vs continuous batching, uniform vs ragged.
+
+Decodes a backlog of requests through `ServeEngine` under both batch
+policies. `eos_id` is set past the vocab so every request runs exactly its
+own `max_new` steps — lengths are deterministic, and the *useful* token
+count (sum of per-request max_new) is identical across policies. Static
+batching decodes each chunk of `n_slots` requests for the chunk's longest
+max_new (finished rows burn idle lanes); continuous batching refills freed
+slots from the backlog, so ragged lengths stop costing straggler time.
+
+  PYTHONPATH=src python -m benchmarks.run --only serve_engine
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import row
+
+N_REQ = 12
+N_SLOTS = 4
+PROMPT_LEN = 16
+CACHE_LEN = 96
+RAGGED = [4, 8, 16, 24, 40, 64]  # cycled over requests
+UNIFORM = [24]
+
+
+def _requests(cfg, lengths):
+    rng = np.random.default_rng(0)
+    return [(rng.integers(2, cfg.vocab, size=(PROMPT_LEN,), dtype=np.int32),
+             lengths[i % len(lengths)]) for i in range(N_REQ)]
+
+
+def _run_static(eng, reqs):
+    """Chunked static batches: each chunk decodes max(chunk max_new)."""
+    done = 0
+    for i in range(0, len(reqs), eng.n_slots):
+        chunk = reqs[i:i + eng.n_slots]
+        prompts = np.stack([p for p, _ in chunk])
+        out = eng.generate(prompts, max_new=max(m for _, m in chunk))
+        done += out.shape[0]
+    return done
+
+
+def _run_continuous(eng, reqs):
+    rids = [eng.submit(p, m) for p, m in reqs]
+    res = eng.drain()
+    return len([res[r] for r in rids])
+
+
+def _bench(policy, lengths, cfg, params):
+    from repro.serve import ServeEngine
+    eng = ServeEngine(cfg, params, cache_len=CACHE_LEN, n_slots=N_SLOTS,
+                      policy=policy, eos_id=cfg.vocab)  # unreachable EOS
+    reqs = _requests(cfg, lengths)
+    runner = _run_static if policy == "static" else _run_continuous
+    runner(eng, reqs[:N_SLOTS])  # warmup: compile prefill/decode/insert
+    t0 = time.perf_counter()
+    runner(eng, reqs)
+    jax.effects_barrier()
+    dt = time.perf_counter() - t0
+    useful = sum(m for _, m in reqs)
+    return dt, useful
+
+
+def run():
+    from repro.configs import get_config
+    from repro.models import common
+    from repro.models import transformer as T
+
+    cfg = get_config("qwen2-1.5b").smoke()
+    params = common.materialize(T.lm_shapes(cfg), jax.random.PRNGKey(0))
+    for kind, lengths in (("uniform", UNIFORM), ("ragged", RAGGED)):
+        for policy in ("static", "continuous"):
+            dt, useful = _bench(policy, lengths, cfg, params)
+            yield row(f"serve_engine/{policy}_{kind}", dt * 1e6,
+                      f"tok_s={useful / dt:.1f} useful={useful}")

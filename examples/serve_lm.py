@@ -1,5 +1,6 @@
-"""Batched serving example: prefill a batch of prompts and decode with the
-slot engine (the decode path the dry-run decode_32k cells lower).
+"""Continuous-batching serving example: submit a ragged backlog of requests
+to the slot scheduler and drain it — slots freed at EOS/max_new refill from
+the queue mid-decode, with per-slot positions over a paged KV cache.
 
   PYTHONPATH=src python examples/serve_lm.py
 """
@@ -15,18 +16,29 @@ from repro.serve import ServeEngine
 
 cfg = get_config("qwen2-1.5b").smoke()
 params = common.materialize(T.lm_shapes(cfg), jax.random.PRNGKey(0))
-eng = ServeEngine(cfg, params, cache_len=96, temperature=0.0)
+eng = ServeEngine(cfg, params, cache_len=96, n_slots=4, temperature=0.0)
 
+# ragged backlog: 8 requests, mixed prompt lengths and budgets, 4 slots
 rng = np.random.default_rng(0)
-prompts = rng.integers(2, cfg.vocab, size=(8, 24), dtype=np.int32)
+reqs = [(rng.integers(2, cfg.vocab, size=(n,), dtype=np.int32), m)
+        for n, m in [(24, 32), (8, 4), (16, 48), (12, 8),
+                     (24, 16), (6, 40), (16, 12), (10, 24)]]
 
 t0 = time.time()
-out = eng.generate(prompts, max_new=32)
+rids = [eng.submit(p, max_new=m) for p, m in reqs]
+res = eng.drain()
 dt = time.time() - t0
-print(f"batch=8 prompt=24 -> +32 tokens in {dt:.1f}s "
-      f"({out.size/dt:.1f} tok/s incl. compile)")
+n_tok = sum(len(res[r]) for r in rids)
+print(f"{len(reqs)} ragged requests over {eng.n_slots} slots -> "
+      f"{n_tok} tokens in {dt:.1f}s ({n_tok/dt:.1f} tok/s incl. compile)")
+
 t0 = time.time()
-out = eng.generate(prompts, max_new=32)
+for p, m in reqs:
+    eng.submit(p, max_new=m)
+res = eng.drain()
 dt = time.time() - t0
-print(f"warm: {out.size/dt:.1f} tok/s")
-print("first sequence:", out[0][:12].tolist())
+print(f"warm: {n_tok/dt:.1f} tok/s")
+
+# the batched API is a thin wrapper over submit()/drain()
+out = eng.generate(np.stack([reqs[0][0], reqs[4][0]]), max_new=12)
+print("first sequence:", out[0].tolist())

@@ -8,6 +8,7 @@ decisions. It owns the mesh and a `rules` dict mapping *logical* axes
   embed     -> "data" under FSDP (params ZeRO-sharded over DP), else None
   heads/kv_heads/mlp/experts/vocab -> "model" (megatron TP / EP / vocab-par)
   kv_seq    -> "model" when the KV cache is sequence-sharded (flash-decode)
+  kv_pages  -> "model" for the paged serving KV pool (pages striped over TP)
   attn_seq  -> "model" for sequence-parallel attention (hillclimb Q1)
 
 Boolean feature flags (attn_p_bf16, mla_flash, moe_local_dispatch) ride in
@@ -57,6 +58,9 @@ class Plan:
             "vocab": tp,
             "layers": None,               # scan axis is never sharded
             "kv_seq": tp if seq_shard_kv else None,
+            # paged serving KV ([n_pages, page_size, ...]): stripe the
+            # physical-page pool over TP; gathers/scatters stay jit-global
+            "kv_pages": tp if seq_shard_kv else None,
             "attn_seq": tp if seq_parallel_attn else None,
             "attn_p_bf16": attn_p_bf16 or None,
             "mla_flash": mla_flash or None,

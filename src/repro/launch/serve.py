@@ -1,7 +1,7 @@
 """Serving launcher CLI (batched requests against a smoke-scale model).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
-      --batch 4 --prompt-len 16 --max-new 16
+      --batch 4 --prompt-len 16 --max-new 16 --policy continuous --slots 4
 """
 from __future__ import annotations
 
@@ -26,14 +26,24 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policy", choices=["continuous", "static"],
+                    default="continuous")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="decode slots (0: one per batch row)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged-KV page size in tokens")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
+    pos_off = cfg.vision_tokens if cfg.vision_dim else 0
     params = common.materialize(T.lm_shapes(cfg), jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, cache_len=args.prompt_len + args.max_new,
-                      temperature=args.temperature, seed=args.seed)
+    eng = ServeEngine(cfg, params,
+                      cache_len=args.prompt_len + pos_off + args.max_new,
+                      temperature=args.temperature, seed=args.seed,
+                      policy=args.policy, n_slots=args.slots,
+                      page_size=args.page_size)
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(2, cfg.vocab, size=(args.batch, args.prompt_len),
                            dtype=np.int32)

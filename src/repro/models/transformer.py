@@ -101,15 +101,28 @@ def lm_shapes(cfg: ArchConfig) -> dict:
 # caches
 # ---------------------------------------------------------------------------
 def _mixer_cache_spec(spec: LayerSpec, cfg: ArchConfig, batch: int,
-                      cache_len: int) -> dict:
+                      cache_len: int, page_size: int = 0,
+                      n_pages: int = 0) -> dict:
     B, S = batch, cache_len
     if spec.mixer == "attn":
+        if page_size:  # paged: [n_pages, page_size, ...] + per-slot tables
+            return {"k": Spec((n_pages, page_size, cfg.n_kv, cfg.d_head),
+                              ("kv_pages", None, "kv_heads", None),
+                              init="zeros"),
+                    "v": Spec((n_pages, page_size, cfg.n_kv, cfg.d_head),
+                              ("kv_pages", None, "kv_heads", None),
+                              init="zeros")}
         return {"k": Spec((B, S, cfg.n_kv, cfg.d_head),
                           ("batch", "kv_seq", "kv_heads", None), init="zeros"),
                 "v": Spec((B, S, cfg.n_kv, cfg.d_head),
                           ("batch", "kv_seq", "kv_heads", None), init="zeros")}
     if spec.mixer == "mla":
         m = cfg.mla
+        if page_size:
+            return {"c_kv": Spec((n_pages, page_size, m.kv_lora),
+                                 ("kv_pages", None, None), init="zeros"),
+                    "k_rope": Spec((n_pages, page_size, m.d_rope),
+                                   ("kv_pages", None, None), init="zeros")}
         return {"c_kv": Spec((B, S, m.kv_lora), ("batch", "kv_seq", None),
                              init="zeros"),
                 "k_rope": Spec((B, S, m.d_rope), ("batch", "kv_seq", None),
@@ -133,14 +146,20 @@ def _mixer_cache_spec(spec: LayerSpec, cfg: ArchConfig, batch: int,
     raise ValueError(spec.mixer)
 
 
-def cache_shapes(cfg: ArchConfig, batch: int, cache_len: int) -> dict:
+def cache_shapes(cfg: ArchConfig, batch: int, cache_len: int, *,
+                 page_size: int = 0, n_pages: int = 0) -> dict:
+    """Cache spec tree. With `page_size`/`n_pages` the per-token mixer caches
+    (attn KV, MLA compressed KV) switch to the paged [n_pages, page_size, ...]
+    layout ("kv_pages" leading axis); per-slot constant-size state (SSM/conv
+    tails, recurrent states, enc_out) keeps its [batch, ...] slot layout."""
     c: dict[str, Any] = {"stack": {
-        f"slot{i}": stack_specs(_mixer_cache_spec(spec, cfg, batch, cache_len),
+        f"slot{i}": stack_specs(_mixer_cache_spec(spec, cfg, batch, cache_len,
+                                                  page_size, n_pages),
                                 cfg.n_superblocks)
         for i, spec in enumerate(cfg.pattern)}}
     for k in range(cfg.first_k_dense):
         c[f"dense{k}"] = _mixer_cache_spec(cfg.pattern[0], cfg, batch,
-                                           cache_len)
+                                           cache_len, page_size, n_pages)
     if cfg.encoder_layers:
         enc_len = min(cfg.max_source_positions, cache_len)
         c["enc_out"] = Spec((batch, enc_len, cfg.d_model),
@@ -156,7 +175,7 @@ def _attn_out(p, o):
     return jnp.einsum("bsh,hd->bsd", o.reshape(B, S, H * DH), p["wo"])
 
 
-def _apply_attn(p, x, cfg, plan, mode, positions, cache, pos_scalar):
+def _apply_attn(p, x, cfg, plan, mode, positions, cache, pos, pages=None):
     q, k, v = L.qkv_project(p, x, x, cfg)
     if cfg.pos == "rope":
         q = apply_rope(q, positions, cfg.rope_theta)
@@ -186,10 +205,20 @@ def _apply_attn(p, x, cfg, plan, mode, positions, cache, pos_scalar):
         new = {"k": jnp.pad(k, pad).astype(cache["k"].dtype),
                "v": jnp.pad(v, pad).astype(cache["v"].dtype)}
         return _attn_out(p, o), new
-    # decode: update + flash-decode over (possibly seq-sharded) cache
+    # decode: update + flash-decode over (paged / possibly seq-sharded) cache
+    if pages is not None:
+        table, psize = pages
+        posv = _pos_vec(pos, q.shape[0])
+        kc = _paged_update(cache["k"], k.astype(cache["k"].dtype), posv,
+                           table, psize)
+        vc = _paged_update(cache["v"], v.astype(cache["v"].dtype), posv,
+                           table, psize)
+        o = L.decode_attention(q, _paged_gather(kc, table),
+                               _paged_gather(vc, table), length=posv + 1)
+        return _attn_out(p, o), {"k": kc, "v": vc}
     o, kc, vc = _decode_attn_update(plan, q, k.astype(cache["k"].dtype),
                                     v.astype(cache["v"].dtype),
-                                    cache["k"], cache["v"], pos_scalar)
+                                    cache["k"], cache["v"], pos)
     return _attn_out(p, o), {"k": kc, "v": vc}
 
 
@@ -204,20 +233,47 @@ def _dp_or_none(plan, batch: int):
     return dp if batch % n == 0 else None
 
 
+def _pos_vec(pos, batch: int):
+    """Normalize a decode position (scalar or per-slot [B] vector) to [B]."""
+    return jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (batch,))
+
+
+def _paged_update(cache, new, posv, table, psize: int):
+    """Per-row write into a paged cache. cache [NP, psize, ...], new
+    [B, 1, ...], posv [B], table [B, P]. Unallocated table entries are an
+    out-of-range sentinel (>= NP), so their writes drop — inactive slots
+    never touch physical pages."""
+    B = new.shape[0]
+    page = table[jnp.arange(B), posv // psize]
+    return cache.at[page, posv % psize].set(new[:, 0], mode="drop")
+
+
+def _paged_gather(cache, table):
+    """Materialize each slot's logical [P*psize, ...] view of its pages.
+    Sentinel entries clamp to an arbitrary physical page; callers mask by
+    per-slot length so the clamped rows never contribute."""
+    B, P = table.shape
+    g = cache[jnp.clip(table, 0, cache.shape[0] - 1)]
+    return g.reshape(B, P * cache.shape[1], *cache.shape[2:])
+
+
 def _decode_attn_update(plan, q, k_new, v_new, kcache, vcache, pos):
-    """Write (k_new, v_new) at `pos` and attend. When the cache sequence dim
-    is sharded over "model", both the update and the flash-decode partial
-    softmax run rank-local inside shard_map (paper-free beyond-baseline:
-    this is flash-decoding adapted to SPMD TPU)."""
+    """Write (k_new, v_new) at per-row `pos` and attend. `pos` may be a
+    scalar (synchronized static batch) or a [B] vector (continuous batching:
+    every slot sits at its own position). When the cache sequence dim is
+    sharded over "model", both the per-row scatter and the flash-decode
+    partial softmax run rank-local inside shard_map (paper-free
+    beyond-baseline: this is flash-decoding adapted to SPMD TPU)."""
     from jax.sharding import PartitionSpec as P
+    posv = _pos_vec(pos, q.shape[0])
     seq_sharded = (plan is not None and "model" in plan.mesh.axis_names
                    and plan.rules.get("kv_seq") is not None
                    and kcache.shape[1] % plan.mesh.shape["model"] == 0)
     if not seq_sharded:
-        kc = jax.lax.dynamic_update_slice(kcache, k_new, (0, pos, 0, 0))
-        vc = jax.lax.dynamic_update_slice(vcache, v_new, (0, pos, 0, 0))
-        o = L.decode_attention(q, kc, vc,
-                               length=jnp.full((q.shape[0],), pos + 1))
+        rows = jnp.arange(q.shape[0])
+        kc = kcache.at[rows, posv].set(k_new[:, 0])
+        vc = vcache.at[rows, posv].set(v_new[:, 0])
+        o = L.decode_attention(q, kc, vc, length=posv + 1)
         return o, kc, vc
 
     mesh = plan.mesh
@@ -228,19 +284,18 @@ def _decode_attn_update(plan, q, k_new, v_new, kcache, vcache, pos):
         _, Sl, KV, _ = kb.shape
         g = H // KV
         r = jax.lax.axis_index("model")
-        lpos = posb - r * Sl
+        lpos = posb - r * Sl                                   # [B]
         in_rng = (lpos >= 0) & (lpos < Sl)
-        upd_idx = jnp.clip(lpos, 0, Sl - 1)
-        kb2 = jax.lax.dynamic_update_slice(kb, knb, (0, upd_idx, 0, 0))
-        vb2 = jax.lax.dynamic_update_slice(vb, vnb, (0, upd_idx, 0, 0))
-        kb = jnp.where(in_rng, kb2, kb)
-        vb = jnp.where(in_rng, vb2, vb)
+        safe = jnp.where(in_rng, lpos, Sl)  # off-rank rows drop
+        rows = jnp.arange(B)
+        kb = kb.at[rows, safe].set(knb[:, 0], mode="drop")
+        vb = vb.at[rows, safe].set(vnb[:, 0], mode="drop")
         gpos = r * Sl + jnp.arange(Sl)
-        valid = gpos <= posb
+        valid = gpos[None, :] <= posb[:, None]                 # [B, Sl]
         qr = qb.reshape(B, KV, g, Dh)
         s = jnp.einsum("bkgd,bckd->bkgc", qr, kb,
                        preferred_element_type=F32) / math.sqrt(Dh)
-        s = jnp.where(valid[None, None, None], s, -jnp.inf)
+        s = jnp.where(valid[:, None, None], s, -jnp.inf)
         m = jax.lax.pmax(jnp.max(s, axis=-1), "model")
         p_ = jnp.exp(s - m[..., None])
         l = jax.lax.psum(jnp.sum(p_, axis=-1), "model")
@@ -251,12 +306,13 @@ def _decode_attn_update(plan, q, k_new, v_new, kcache, vcache, pos):
 
     return shard_map(
         local, mesh=mesh,
-        in_specs=(P(dp), P(dp), P(dp), P(dp, "model"), P(dp, "model"), P()),
+        in_specs=(P(dp), P(dp), P(dp), P(dp, "model"), P(dp, "model"),
+                  P(dp)),
         out_specs=(P(dp), P(dp, "model"), P(dp, "model")),
-        check=False)(q, k_new, v_new, kcache, vcache, pos)
+        check=False)(q, k_new, v_new, kcache, vcache, posv)
 
 
-def _apply_mla(p, x, cfg, plan, mode, positions, cache, pos_scalar):
+def _apply_mla(p, x, cfg, plan, mode, positions, cache, pos, pages=None):
     q_nope, q_rope = L.mla_project_q(p, x, cfg, positions)
     c_new, kr_new = L.mla_compress_kv(p, x, cfg, positions)
     if plan is not None:  # TP: query heads over "model"
@@ -280,24 +336,27 @@ def _apply_mla(p, x, cfg, plan, mode, positions, cache, pos_scalar):
                                     c_new.astype(cache["c_kv"].dtype),
                                     kr_new.astype(cache["k_rope"].dtype),
                                     cache["c_kv"], cache["k_rope"],
-                                    pos_scalar, cfg)
+                                    pos, cfg, pages)
     return L.mla_output(p, o, cfg), {"c_kv": cc, "k_rope": krc}
 
 
 def _mla_decode_update(plan, p, q_nope, q_rope, c_new, kr_new, c_cache,
-                       kr_cache, pos, cfg):
-    """Absorbed-matrix MLA flash-decode over the (seq-sharded) compressed
-    cache: scores q_eff.c + q_rope.k_rope, values combine in latent space."""
+                       kr_cache, pos, cfg, pages=None):
+    """Absorbed-matrix MLA flash-decode over the (paged / seq-sharded)
+    compressed cache: scores q_eff.c + q_rope.k_rope, values combine in
+    latent space. `pos` is scalar or per-slot [B]."""
     from jax.sharding import PartitionSpec as P
     m = cfg.mla
     H = cfg.n_heads
     B = q_nope.shape[0]
+    posv = _pos_vec(pos, B)
     w_uk = p["w_uk"].reshape(m.kv_lora, H, m.d_nope)
     q_eff = jnp.einsum("bshn,qhn->bshq", q_nope, w_uk)[:, 0]   # [B,H,lora]
     qr = q_rope[:, 0]                                          # [B,H,rope]
     scale = 1.0 / math.sqrt(m.d_nope + m.d_rope)
 
-    seq_sharded = (plan is not None and "model" in plan.mesh.axis_names
+    seq_sharded = (pages is None and plan is not None
+                   and "model" in plan.mesh.axis_names
                    and plan.rules.get("kv_seq") is not None
                    and c_cache.shape[1] % plan.mesh.shape["model"] == 0)
 
@@ -307,7 +366,8 @@ def _mla_decode_update(plan, p, q_nope, q_rope, c_new, kr_new, c_cache,
         s = (jnp.einsum("bhq,btq->bht", qe, cc, preferred_element_type=F32)
              + jnp.einsum("bhr,btr->bht", qrope, krc,
                           preferred_element_type=F32)) * scale
-        s = jnp.where((gpos <= posb)[None, None], s, -jnp.inf)
+        s = jnp.where(gpos[None, None, :] <= posb[:, None, None], s,
+                      -jnp.inf)
         m_loc = jnp.max(s, axis=-1)
         if axis:
             m_g = jax.lax.pmax(m_loc, axis)
@@ -322,10 +382,17 @@ def _mla_decode_update(plan, p, q_nope, q_rope, c_new, kr_new, c_cache,
             lat = jax.lax.psum(lat, axis)
         return (lat / jnp.maximum(l, 1e-30)[..., None])
 
-    if not seq_sharded:
-        cc = jax.lax.dynamic_update_slice(c_cache, c_new, (0, pos, 0))
-        krc = jax.lax.dynamic_update_slice(kr_cache, kr_new, (0, pos, 0))
-        lat = attend(q_eff, qr, cc, krc, pos)
+    if pages is not None:
+        table, psize = pages
+        cc = _paged_update(c_cache, c_new, posv, table, psize)
+        krc = _paged_update(kr_cache, kr_new, posv, table, psize)
+        lat = attend(q_eff, qr, _paged_gather(cc, table),
+                     _paged_gather(krc, table), posv)
+    elif not seq_sharded:
+        rows = jnp.arange(B)
+        cc = c_cache.at[rows, posv].set(c_new[:, 0])
+        krc = kr_cache.at[rows, posv].set(kr_new[:, 0])
+        lat = attend(q_eff, qr, cc, krc, posv)
     else:
         mesh = plan.mesh
         dp = _dp_or_none(plan, q_nope.shape[0])
@@ -333,13 +400,12 @@ def _mla_decode_update(plan, p, q_nope, q_rope, c_new, kr_new, c_cache,
         def local(qe, qrope, cnb, krnb, cb, krb, posb):
             Sl = cb.shape[1]
             r = jax.lax.axis_index("model")
-            lpos = posb - r * Sl
+            lpos = posb - r * Sl                               # [B]
             in_rng = (lpos >= 0) & (lpos < Sl)
-            idx = jnp.clip(lpos, 0, Sl - 1)
-            cb2 = jax.lax.dynamic_update_slice(cb, cnb, (0, idx, 0))
-            krb2 = jax.lax.dynamic_update_slice(krb, krnb, (0, idx, 0))
-            cb = jnp.where(in_rng, cb2, cb)
-            krb = jnp.where(in_rng, krb2, krb)
+            safe = jnp.where(in_rng, lpos, Sl)  # off-rank rows drop
+            rows = jnp.arange(cb.shape[0])
+            cb = cb.at[rows, safe].set(cnb[:, 0], mode="drop")
+            krb = krb.at[rows, safe].set(krnb[:, 0], mode="drop")
             lat = attend(qe, qrope, cb, krb, posb, axis="model",
                          rank0=r * Sl)
             return lat, cb, krb
@@ -347,9 +413,9 @@ def _mla_decode_update(plan, p, q_nope, q_rope, c_new, kr_new, c_cache,
         lat, cc, krc = shard_map(
             local, mesh=mesh,
             in_specs=(P(dp), P(dp), P(dp), P(dp), P(dp, "model"),
-                      P(dp, "model"), P()),
+                      P(dp, "model"), P(dp)),
             out_specs=(P(dp), P(dp, "model"), P(dp, "model")),
-            check=False)(q_eff, qr, c_new, kr_new, c_cache, kr_cache, pos)
+            check=False)(q_eff, qr, c_new, kr_new, c_cache, kr_cache, posv)
 
     w_uv = p["w_uv"].reshape(m.kv_lora, H, m.d_v)
     o = jnp.einsum("bhq,qhv->bhv", lat.astype(q_nope.dtype), w_uv)
@@ -357,11 +423,13 @@ def _mla_decode_update(plan, p, q_nope, q_rope, c_new, kr_new, c_cache,
 
 
 def _apply_mixer(spec: LayerSpec, p, x, cfg, plan, mode, positions, cache,
-                 pos_scalar):
+                 pos, pages=None):
     if spec.mixer == "attn":
-        return _apply_attn(p, x, cfg, plan, mode, positions, cache, pos_scalar)
+        return _apply_attn(p, x, cfg, plan, mode, positions, cache, pos,
+                           pages)
     if spec.mixer == "mla":
-        return _apply_mla(p, x, cfg, plan, mode, positions, cache, pos_scalar)
+        return _apply_mla(p, x, cfg, plan, mode, positions, cache, pos,
+                          pages)
     def _cast(new):
         if new is None or cache is None:
             return new
@@ -389,11 +457,12 @@ def _apply_mixer(spec: LayerSpec, p, x, cfg, plan, mode, positions, cache,
 
 
 def _apply_layer(spec: LayerSpec, p, x, cfg, plan, mode, positions, cache,
-                 pos_scalar, cross_p=None, enc_out=None, expert_perm=None):
+                 pos, cross_p=None, enc_out=None, expert_perm=None,
+                 pages=None):
     aux = jnp.float32(0.0)
     h = _norm(p["norm1"], x, cfg)
     mix, new_cache = _apply_mixer(spec, p["mixer"], h, cfg, plan, mode,
-                                  positions, cache, pos_scalar)
+                                  positions, cache, pos, pages)
     x = x + mix
     if cross_p is not None and enc_out is not None:
         hx = _norm(cross_p["normx"], x, cfg)
@@ -440,14 +509,30 @@ def _encoder_forward(params, frames, cfg, plan):
     return _norm(params["encoder"]["final_norm"], x, cfg)
 
 
+def _positions(pos, S: int):
+    """Sequence positions for the current chunk: [S] when `pos` is None or
+    scalar, [B, S] when `pos` is a per-slot [B] vector (continuous decode:
+    each batch row sits at its own position)."""
+    if pos is None:
+        return jnp.arange(S)
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        return pos + jnp.arange(S)
+    return pos[:, None] + jnp.arange(S)[None, :]
+
+
 def forward(params, tokens, cfg: ArchConfig, plan=None, *, mode="train",
             cache=None, pos=None, vision=None, enc_frames=None,
-            expert_perm=None, remat=True):
-    """Returns (hidden [B,S,D], new_cache, aux_loss)."""
+            expert_perm=None, remat=True, page_table=None,
+            page_size: int = 0):
+    """Returns (hidden [B,S,D], new_cache, aux_loss). `pos` may be a scalar
+    (synchronized decode) or a [B] vector of per-slot positions; with
+    `page_table` [B, P] (+ static `page_size`) the decode-mode KV updates go
+    through the paged block-table layout instead of the dense [B, S] one."""
     B, S = tokens.shape
+    pages = (page_table, page_size) if page_table is not None else None
     x = L.embed_apply(params["embed"], tokens, cfg,
-                      positions=(jnp.arange(S) if pos is None
-                                 else jnp.full((S,), pos))
+                      positions=_positions(pos, S)
                       if cfg.pos == "learned" else None)
     if vision is not None and cfg.vision_dim:
         vx = jnp.einsum("bpv,vd->bpd", vision, params["embed"]["vis_proj"])
@@ -456,7 +541,7 @@ def forward(params, tokens, cfg: ArchConfig, plan=None, *, mode="train",
     if plan is not None:
         x = plan.constraint(x, "batch", None, None)
 
-    positions = jnp.arange(S) if pos is None else pos + jnp.arange(S)
+    positions = _positions(pos, S)
     enc_out = None
     if cfg.encoder_layers:
         if mode == "decode":
@@ -471,7 +556,8 @@ def forward(params, tokens, cfg: ArchConfig, plan=None, *, mode="train",
         c = cache[f"dense{k}"] if cache is not None else None
         x, nc, a = _apply_layer(
             dataclasses.replace(cfg.pattern[0], ffn="mlp"),
-            params[f"dense{k}"], x, cfg, plan, mode, positions, c, pos)
+            params[f"dense{k}"], x, cfg, plan, mode, positions, c, pos,
+            pages=pages)
         aux += a
         if cache is not None and nc is not None:
             cache = dict(cache)
@@ -489,7 +575,7 @@ def forward(params, tokens, cfg: ArchConfig, plan=None, *, mode="train",
             xp = slot_cross[key] if slot_cross is not None else None
             x, nc, a = _apply_layer(spec, slot_params[key], x, cfg, plan,
                                     mode, positions, c, pos, xp, enc_out,
-                                    expert_perm)
+                                    expert_perm, pages)
             aux = aux + a
             new_caches[key] = nc
         return (x, aux), new_caches
@@ -560,9 +646,13 @@ def prefill(params, tokens, cache, cfg: ArchConfig, plan=None, *,
 
 
 def decode_step(params, token, pos, cache, cfg: ArchConfig, plan=None,
-                expert_perm=None):
-    """token [B,1] int32, pos scalar int32. Returns (logits [B,V], cache)."""
+                expert_perm=None, page_table=None, page_size: int = 0):
+    """token [B,1] int32, pos scalar int32 OR per-slot [B] int32 vector
+    (continuous batching). With `page_table` [B, P] + static `page_size` the
+    KV caches are paged (see `cache_shapes(page_size=..., n_pages=...)`).
+    Returns (logits [B,V], cache)."""
     x, new_cache, _ = forward(params, token, cfg, plan, mode="decode",
-                              cache=cache, pos=pos, expert_perm=expert_perm)
+                              cache=cache, pos=pos, expert_perm=expert_perm,
+                              page_table=page_table, page_size=page_size)
     logits = L.unembed_apply(params["embed"], x, cfg)
     return logits[:, 0], new_cache

@@ -1,1 +1,6 @@
 from repro.serve.engine import ServeEngine  # noqa: F401
+from repro.serve.paging import (  # noqa: F401
+    OutOfPagesError,
+    PageManager,
+    PagingSpec,
+)

@@ -1,14 +1,36 @@
-"""Batched serving engine: prefill + synchronized batched decode.
+"""Continuous-batching serving engine over a paged KV cache.
 
-Static batching: a batch of requests is padded to a common prompt length,
-prefilled once, then decoded lock-step with temperature/greedy sampling and
-per-sequence EOS masking. (Per-slot positions / continuous batching would
-need per-row cache scatter — noted as future work in DESIGN.md; the
-synchronized scheme is what the dry-run decode cells lower.)
+The engine runs a slot scheduler (`submit()` / `step()` / `drain()`): each
+request is prefilled alone (batch-1) and inserted into a free decode slot,
+all active slots decode together with *per-slot positions* (a `[n_slots]`
+positions vector — no synchronized scalar `pos`), and a slot that finishes
+(EOS or its own `max_new`) is freed mid-decode and immediately refilled from
+the queue. A straggler therefore never holds other slots hostage, which is
+what the static scheme this module used to implement did (one long sequence
+pinned the whole batch until `done.all()`).
+
+Per-token KV state lives in a block-table paged pool (`serve/paging.py`):
+fixed-size pages + per-slot page tables, so a request reserves pages for its
+own `prompt + vision offset + max_new` tokens instead of `cache_len` per
+slot, and returns them at EOS. Per-slot constant-size state (SSM conv tails,
+recurrent states, encoder output) stays in `[n_slots, ...]` rows. Cache
+allocation is plan-aware either way: with a `Plan`, the paged pool stripes
+its physical pages over the TP axis ("kv_pages") exactly like the dense
+layout seq-shards ("kv_seq"), allocated sharded from the start.
+
+`generate()` is a thin wrapper over the scheduler and keeps the old batched
+API; `policy="static"` keeps the synchronized static batch (used as the
+benchmark baseline in `benchmarks/serve_engine.py`). Under greedy sampling,
+a prompt decoded inside a mixed-length continuous batch is bit-identical to
+the same prompt decoded solo (slots are row-independent; MoE capacity
+dispatch is the documented exception — its token-drop threshold is batch
+global).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +39,15 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import common
 from repro.models import transformer as T
+from repro.serve import paging
+
+
+@dataclasses.dataclass
+class _Request:
+    rid: int
+    prompt: np.ndarray          # [S0] int32
+    max_new: int
+    tokens: list
 
 
 @dataclasses.dataclass
@@ -28,74 +59,233 @@ class ServeEngine:
     temperature: float = 0.0
     eos_id: int = 1
     seed: int = 0
+    n_slots: int = 0            # 0 -> sized from the first generate() batch
+    page_size: int = 16
+    n_pages: int = 0            # 0 -> n_slots * ceil(cache_len / page_size)
+    policy: str = "continuous"  # "continuous" | "static"
+    record_keys: bool = False   # keep (tag, key) of every sample for tests
 
     def __post_init__(self):
+        if self.policy not in ("continuous", "static"):
+            raise ValueError(f"unknown policy {self.policy!r}")
         if self.plan is not None:
             # place params per the plan so callers can hand in host arrays;
             # the decode path then runs sharded (seq-sharded KV flash-decode
-            # when the plan enables kv_seq)
+            # when the plan enables kv_seq; TP-striped page pool when paged)
             self.params = jax.device_put(
                 self.params, self.plan.param_shardings(T.lm_shapes(self.cfg)))
         self._prefill = jax.jit(
-            lambda p, t, c: T.prefill(p, t, c, self.cfg, self.plan))
+            lambda p, t, c, **kw: T.prefill(p, t, c, self.cfg, self.plan,
+                                            **kw))
         self._decode = jax.jit(
             lambda p, t, pos, c: T.decode_step(p, t, pos, c, self.cfg,
-                                               self.plan))
+                                               self.plan),
+            donate_argnums=(3,))
+        self._decode_paged = jax.jit(
+            lambda p, t, pos, c, tbl: T.decode_step(
+                p, t, pos, c, self.cfg, self.plan, page_table=tbl,
+                page_size=self.page_size),
+            donate_argnums=(3,))
+        self._rng = jax.random.PRNGKey(self.seed)
+        self._keys_used: list = []
+        self._queue: collections.deque = collections.deque()
+        self._active: dict[int, _Request] = {}
+        self._results: dict[int, np.ndarray] = {}
+        self._next_rid = 0
+        self._cache = None
 
-    def generate(self, prompts: np.ndarray, max_new: int = 32,
-                 extras: dict | None = None) -> np.ndarray:
-        """prompts: [B, S0] int32 (left-aligned, pad with 0 to equal S0).
-        Returns generated tokens [B, max_new]."""
-        B, S0 = prompts.shape
-        assert S0 + max_new <= self.cache_len, "cache too small"
-        cspecs = T.cache_shapes(self.cfg, B, self.cache_len)
-        zeros = lambda: common.tree_map_specs(
-            lambda s: jnp.zeros(s.shape, jnp.float32), cspecs)
-        if self.plan is not None:
-            # allocate sharded from the start: a replicated-then-reshard
-            # cache would peak at full unsharded size per device, exactly
-            # what kv_seq sharding exists to avoid
-            cache = jax.jit(
-                zeros,
-                out_shardings=self.plan.param_shardings(cspecs))()
-        else:
-            cache = zeros()
-        kw = {}
-        if self.cfg.vision_dim:
-            kw["vision"] = jnp.zeros((B, self.cfg.vision_tokens,
-                                      self.cfg.vision_dim), jnp.float32)
-        if self.cfg.encoder_layers:
-            kw["enc_frames"] = jnp.zeros(
-                (B, min(self.cfg.max_source_positions, self.cache_len),
-                 self.cfg.d_model), jnp.float32)
-        if kw:
-            logits, cache = jax.jit(
-                lambda p, t, c, **k: T.prefill(p, t, c, self.cfg, self.plan,
-                                               **k))(self.params,
-                                                     jnp.asarray(prompts),
-                                                     cache, **kw)
-        else:
-            logits, cache = self._prefill(self.params, jnp.asarray(prompts),
-                                          cache)
+    # ------------------------------------------------------------ plumbing
+    @property
+    def _pos_off(self) -> int:
+        return self.cfg.vision_tokens if self.cfg.vision_dim else 0
 
-        rng = jax.random.PRNGKey(self.seed)
-        out = np.zeros((B, max_new), np.int32)
-        done = np.zeros((B,), bool)
-        pos_off = self.cfg.vision_tokens if self.cfg.vision_dim else 0
-        tok = self._sample(logits, rng)
-        for i in range(max_new):
-            out[:, i] = np.where(done, self.eos_id, np.asarray(tok))
-            done |= np.asarray(tok) == self.eos_id
-            if done.all():
-                break
-            rng, sub = jax.random.split(rng)
-            logits, cache = self._decode(self.params, tok[:, None],
-                                         jnp.int32(S0 + pos_off + i), cache)
-            tok = self._sample(logits, sub)
-        return out
+    def _validate(self, prompt_len: int, max_new: int) -> None:
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        need = prompt_len + self._pos_off + max_new
+        if need > self.cache_len:
+            raise ValueError(
+                f"cache too small: prompt {prompt_len} + vision offset "
+                f"{self._pos_off} + max_new {max_new} = {need} > "
+                f"cache_len {self.cache_len}")
+
+    def _next_key(self, tag: str):
+        self._rng, sub = jax.random.split(self._rng)
+        if self.record_keys:
+            self._keys_used.append((tag, np.asarray(sub)))
+        return sub
 
     def _sample(self, logits, rng):
         if self.temperature <= 0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return jax.random.categorical(
             rng, logits / self.temperature, axis=-1).astype(jnp.int32)
+
+    def _alloc_cache(self, cspecs):
+        zeros = lambda: common.tree_map_specs(
+            lambda s: jnp.zeros(s.shape, jnp.float32), cspecs)
+        if self.plan is not None:
+            # allocate sharded from the start: a replicated-then-reshard
+            # cache would peak at full unsharded size per device, exactly
+            # what kv_seq / kv_pages sharding exists to avoid
+            return jax.jit(
+                zeros, out_shardings=self.plan.param_shardings(cspecs))()
+        return zeros()
+
+    def _prefill_kwargs(self, batch: int) -> dict:
+        kw = {}
+        if self.cfg.vision_dim:
+            kw["vision"] = jnp.zeros((batch, self.cfg.vision_tokens,
+                                      self.cfg.vision_dim), jnp.float32)
+        if self.cfg.encoder_layers:
+            kw["enc_frames"] = jnp.zeros(
+                (batch, min(self.cfg.max_source_positions, self.cache_len),
+                 self.cfg.d_model), jnp.float32)
+        return kw
+
+    def _ensure(self, n_slots_hint: int = 1) -> None:
+        if self._cache is not None:
+            return
+        if self.n_slots <= 0:
+            self.n_slots = max(n_slots_hint, 1)
+        pages_per_slot = int(math.ceil(self.cache_len / self.page_size))
+        if self.n_pages <= 0:
+            self.n_pages = self.n_slots * pages_per_slot
+        self._pm = paging.PageManager(
+            self.n_slots, pages_per_slot,
+            paging.PagingSpec(self.page_size, self.n_pages))
+        cspecs = T.cache_shapes(self.cfg, self.n_slots, self.cache_len,
+                                page_size=self.page_size,
+                                n_pages=self.n_pages)
+        self._cache = self._alloc_cache(cspecs)
+        self._insert = jax.jit(paging.make_insert(cspecs, self.page_size),
+                               donate_argnums=(0,))
+        dense1 = T.cache_shapes(self.cfg, 1, self.cache_len)
+        self._dense_zeros = jax.jit(lambda: common.tree_map_specs(
+            lambda s: jnp.zeros(s.shape, jnp.float32), dense1))
+        self._slot_pos = np.zeros((self.n_slots,), np.int32)
+        self._slot_tok = np.zeros((self.n_slots,), np.int32)
+        self._free_slots = list(range(self.n_slots - 1, -1, -1))
+
+    # ----------------------------------------------------- slot scheduler
+    def submit(self, prompt, max_new: int = 32) -> int:
+        """Queue one request. prompt: [S0] int32. Returns a request id whose
+        tokens `step()`/`drain()` eventually deliver."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        self._validate(len(prompt), max_new)
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(_Request(rid, prompt, int(max_new), []))
+        return rid
+
+    def _commit(self, slot: int, req: _Request, tok: int,
+                finished: list) -> None:
+        req.tokens.append(tok)
+        if tok == self.eos_id or len(req.tokens) >= req.max_new:
+            del self._active[slot]
+            self._pm.release(slot)
+            self._free_slots = sorted(set(self._free_slots) | {slot},
+                                      reverse=True)
+            self._results[req.rid] = np.asarray(req.tokens, np.int32)
+            finished.append(req.rid)
+
+    def step(self) -> list:
+        """Admit queued requests into free slots (prefill + insert), then one
+        decode step for every active slot. Returns rids finished this step."""
+        self._ensure()
+        finished: list = []
+        # admission: prefill-insert into freed slots (MaxText idiom)
+        while self._queue and self._free_slots:
+            req = self._queue[0]
+            need_tok = len(req.prompt) + self._pos_off + req.max_new
+            if not self._pm.can_alloc(need_tok):
+                if self._active:
+                    break  # pages return at the next EOS; wait
+                raise paging.OutOfPagesError(
+                    f"request needs {self._pm.spec.pages_for(need_tok)} "
+                    f"pages but the idle pool has {self._pm.free_pages} "
+                    f"of {self.n_pages}")
+            self._queue.popleft()
+            slot = self._free_slots.pop()
+            self._pm.alloc(slot, need_tok)
+            dense = self._dense_zeros()
+            logits, dense = self._prefill(
+                self.params, jnp.asarray(req.prompt[None]), dense,
+                **self._prefill_kwargs(1))
+            self._cache = self._insert(
+                self._cache, dense, jnp.int32(slot),
+                jnp.asarray(self._pm.table[slot]))
+            tok = int(np.asarray(
+                self._sample(logits, self._next_key("prefill")))[0])
+            self._slot_pos[slot] = len(req.prompt) + self._pos_off
+            self._slot_tok[slot] = tok
+            self._active[slot] = req
+            self._commit(slot, req, tok, finished)
+        # decode: per-slot positions, paged KV scatter; freed slots' table
+        # rows are sentinels, so their lanes are inert
+        if self._active:
+            logits, self._cache = self._decode_paged(
+                self.params, jnp.asarray(self._slot_tok[:, None]),
+                jnp.asarray(self._slot_pos), self._cache,
+                self._pm.device_table())
+            toks = np.asarray(self._sample(logits, self._next_key("decode")))
+            for slot, req in list(self._active.items()):
+                self._slot_pos[slot] += 1
+                tok = int(toks[slot])
+                self._slot_tok[slot] = tok
+                self._commit(slot, req, tok, finished)
+        return finished
+
+    def drain(self) -> dict:
+        """Run `step()` until queue and slots are empty; returns
+        {rid: np.ndarray of generated tokens (EOS included when emitted)}."""
+        while self._queue or self._active:
+            self.step()
+        out, self._results = self._results, {}
+        return out
+
+    # ------------------------------------------------------- batched API
+    def generate(self, prompts: np.ndarray, max_new: int = 32,
+                 extras: dict | None = None) -> np.ndarray:
+        """prompts: [B, S0] int32 (left-aligned, pad with 0 to equal S0).
+        Returns generated tokens [B, max_new]; positions after a sequence's
+        EOS are filled with `eos_id` (never pad-0)."""
+        prompts = np.asarray(prompts, np.int32)
+        B, S0 = prompts.shape
+        self._validate(S0, max_new)
+        self._rng = jax.random.PRNGKey(self.seed)  # per-call reproducibility
+        if self.policy == "static":
+            return self._generate_static(prompts, max_new)
+        self._ensure(B)
+        rids = [self.submit(prompts[i], max_new) for i in range(B)]
+        res = self.drain()
+        out = np.full((B, max_new), self.eos_id, np.int32)
+        for i, rid in enumerate(rids):
+            t = res[rid]
+            out[i, :len(t)] = t
+        return out
+
+    def _generate_static(self, prompts: np.ndarray, max_new: int):
+        """Synchronized static batch (benchmark baseline): one dense cache
+        row per request, lock-step decode until every row is done — a long
+        straggler holds all B rows."""
+        B, S0 = prompts.shape
+        cache = self._alloc_cache(T.cache_shapes(self.cfg, B, self.cache_len))
+        kw = self._prefill_kwargs(B)
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts),
+                                      cache, **kw)
+        out = np.zeros((B, max_new), np.int32)
+        done = np.zeros((B,), bool)
+        pos_off = self._pos_off
+        tok = self._sample(logits, self._next_key("prefill"))
+        for i in range(max_new):
+            out[:, i] = np.where(done, self.eos_id, np.asarray(tok))
+            done |= np.asarray(tok) == self.eos_id
+            if done.all():
+                out[:, i + 1:] = self.eos_id  # consistent post-EOS padding
+                break
+            logits, cache = self._decode(
+                self.params, tok[:, None],
+                jnp.full((B,), S0 + pos_off + i, jnp.int32), cache)
+            tok = self._sample(logits, self._next_key("decode"))
+        return out

@@ -1,0 +1,149 @@
+"""Block-table paged KV layout for the serving engine.
+
+Physical per-token cache storage is a pool of fixed-size pages
+([n_pages, page_size, ...] per layer, see `transformer.cache_shapes(
+page_size=..., n_pages=...)`); each slot owns a row of a page table mapping
+logical page -> physical page (the MaxText `page_manager` / flashinfer
+block-table idiom). Heterogeneous sequence lengths then reserve pages
+proportional to their own request (prompt + vision offset + max_new) instead
+of `cache_len` per slot, and a finished request's pages return to the pool
+immediately at EOS.
+
+Host side, `PageManager` is a free-list allocator over the physical pool.
+Device side, the sentinel convention makes inactive slots inert without
+masking: unallocated table entries hold `n_pages` (one past the pool), so
+decode writes through them drop (`mode="drop"` scatter) and gathers clamp to
+an arbitrary page whose rows the per-slot length mask then discards.
+
+`make_insert` builds the prefill-insert step (the MaxText
+prefill-insert/decode-loop split): a batch-1 *dense* prefill cache is
+scattered into the slot's pages (per-token leaves) / slot row (per-slot SSM
+and encoder state), driven entirely by the cache `Spec` axes — "kv_pages"
+leaves page-scatter, "batch" leaves slot-insert.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import is_spec
+
+
+class OutOfPagesError(RuntimeError):
+    """Raised when a request cannot be admitted even on an idle engine."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PagingSpec:
+    page_size: int
+    n_pages: int
+
+    def __post_init__(self):
+        if self.page_size <= 0 or self.n_pages <= 0:
+            raise ValueError(f"invalid paging spec {self}")
+
+    def pages_for(self, n_tokens: int) -> int:
+        return int(math.ceil(n_tokens / self.page_size))
+
+
+class PageManager:
+    """Free-list page allocator with per-slot page tables.
+
+    `table` is [n_slots, pages_per_slot] int32; unallocated entries hold the
+    sentinel `n_pages`. Allocation is all-at-admission: a request's full
+    page budget (prompt + offset + max_new tokens) is claimed up front, so
+    decode never needs a mid-flight extend, and `release` returns the whole
+    row to the free list (lowest-numbered pages are handed out first, so
+    physical reuse is deterministic given the request order)."""
+
+    def __init__(self, n_slots: int, pages_per_slot: int, spec: PagingSpec):
+        self.spec = spec
+        self.n_slots = n_slots
+        self.table = np.full((n_slots, pages_per_slot), spec.n_pages,
+                             np.int32)
+        self.lengths = np.zeros((n_slots,), np.int32)
+        self._free = list(range(spec.n_pages - 1, -1, -1))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def can_alloc(self, n_tokens: int) -> bool:
+        need = self.spec.pages_for(n_tokens)
+        return need <= len(self._free) and need <= self.table.shape[1]
+
+    def alloc(self, slot: int, n_tokens: int) -> None:
+        need = self.spec.pages_for(n_tokens)
+        if need > self.table.shape[1]:
+            raise OutOfPagesError(
+                f"request needs {need} pages > pages_per_slot "
+                f"{self.table.shape[1]} (n_tokens={n_tokens}, "
+                f"page_size={self.spec.page_size})")
+        if need > len(self._free):
+            raise OutOfPagesError(
+                f"request needs {need} pages, only {len(self._free)} free "
+                f"of {self.spec.n_pages}")
+        assert (self.table[slot] == self.spec.n_pages).all(), \
+            f"slot {slot} still holds pages"
+        for i in range(need):
+            self.table[slot, i] = self._free.pop()
+        self.lengths[slot] = n_tokens
+
+    def release(self, slot: int) -> None:
+        row = self.table[slot]
+        freed = sorted(int(p) for p in row if p < self.spec.n_pages)
+        # keep the free list sorted descending so .pop() hands out the
+        # lowest page first — deterministic physical placement
+        self._free = sorted(set(self._free) | set(freed), reverse=True)
+        self.table[slot] = self.spec.n_pages
+        self.lengths[slot] = 0
+
+    def device_table(self) -> jax.Array:
+        return jnp.asarray(self.table)
+
+
+def _leaf_kind(spec) -> tuple[str, int]:
+    """('paged', axis of n_pages) or ('slot', axis of batch) for one cache
+    Spec (stacked leaves carry a leading 'layers' axis)."""
+    if "kv_pages" in spec.axes:
+        return "paged", spec.axes.index("kv_pages")
+    if "batch" in spec.axes:
+        return "slot", spec.axes.index("batch")
+    raise ValueError(f"cache spec with neither kv_pages nor batch: {spec}")
+
+
+def make_insert(paged_specs, page_size: int):
+    """Build `insert(paged_cache, dense_cache, slot, table_row)`: scatter a
+    batch-1 dense prefill cache into `slot`'s pages / slot row. jit-able;
+    `slot` is a traced scalar, `table_row` a traced [pages_per_slot] row."""
+    spec_leaves, treedef = jax.tree_util.tree_flatten(paged_specs,
+                                                      is_leaf=is_spec)
+    kinds = [_leaf_kind(s) for s in spec_leaves]
+
+    def insert(paged_cache, dense_cache, slot, table_row):
+        big_leaves = treedef.flatten_up_to(paged_cache)
+        small_leaves = treedef.flatten_up_to(dense_cache)
+        out = []
+        for big, small, (kind, ax) in zip(big_leaves, small_leaves, kinds):
+            if kind == "paged":
+                # big [..., NP, ps, tail], small [..., 1, CL, tail]; write
+                # logical row p to physical (table[p // ps], p % ps) —
+                # rows past the slot's allocated pages hit the sentinel
+                # and drop
+                cl = small.shape[ax + 1]
+                rows = jnp.squeeze(small, axis=ax).astype(big.dtype)
+                p = jnp.arange(cl)
+                page = table_row[p // page_size]
+                idx = (slice(None),) * ax + (page, p % page_size)
+                out.append(big.at[idx].set(rows, mode="drop"))
+            else:
+                start = (0,) * ax + (slot,) + (0,) * (big.ndim - ax - 1)
+                out.append(jax.lax.dynamic_update_slice(
+                    big, small.astype(big.dtype), start))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return insert

@@ -72,6 +72,12 @@ def test_decode_matches_full_forward(name):
     lg_ref = L.unembed_apply(params["embed"], x[:, -1:], cfg)[:, 0]
     np.testing.assert_allclose(np.asarray(lg_d), np.asarray(lg_ref),
                                atol=2e-3, rtol=1e-3)
+    # a uniform per-row position vector must be bit-identical to scalar pos
+    cache2 = jax.tree.map(jnp.zeros_like, cache)
+    _, cache2 = T.prefill(params, toks[:, :S], cache2, cfg, **kw)
+    lg_v, _ = T.decode_step(params, toks[:, S:S + 1],
+                            jnp.full((B,), S, jnp.int32), cache2, cfg)
+    np.testing.assert_array_equal(np.asarray(lg_v), np.asarray(lg_d))
 
 
 def test_flash_attention_matches_naive():
