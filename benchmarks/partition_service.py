@@ -1,0 +1,92 @@
+"""Partition-service throughput: sequential vs bucketed-vmap vs routed.
+
+Pushes a mixed-shape flood of small partition requests (four tenant shape
+classes, two graphs each) through four policies and reports sustained
+requests/sec:
+
+* sequential — the service with `batch_slots=1`: every request is padded
+  into its capacity bucket and solved one at a time (one device V-cycle
+  per request, single jit signature, no batching);
+* bucketed-vmap — the same service with `batch_slots` lanes: up to four
+  requests stack into one vmapped device batch sharing that jit cache
+  entry, amortising per-solve dispatch/stack/audit overhead;
+* exact-caps — one `core.partitioner.partition()` call per request (the
+  pre-service baseline). Its host-driven loop repacks every coarsened
+  level to data-dependent exact caps, so each *novel* caps chain pays a
+  fresh multi-second XLA compile. A same-shape-class warmup flood does
+  not cover the timed flood's chains (coarse-level pair counts depend on
+  the data, not just the shape), so sustained mixed traffic keeps paying
+  the recompile tax — which is the pathology the fixed-caps buckets
+  remove;
+* routed — the service with `route_threshold` below the request sizes
+  (every request takes the host-driven V-cycle lane through the
+  scheduler), isolating scheduler overhead from the batching win.
+
+Warmup (compile) is excluded: each policy first solves a throwaway flood
+drawn from the same shape classes. The derived column is sustained req/s;
+the acceptance comparison is bucketed_vmap vs sequential.
+
+  PYTHONPATH=src python -m benchmarks.run --only partition_service
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import row
+
+# (nodes, edges, pins-per-edge) per tenant shape class; two requests each.
+# All four classes place into the smallest service bucket (n=64), so the
+# bucketed policy runs the flood as two full four-lane batches.
+SHAPES = [(40, 56, 3), (48, 64, 4), (56, 60, 4), (64, 64, 3)]
+N_REQ = 2 * len(SHAPES)
+OMEGA, DELTA = 16, 256
+THETA = 4
+BATCH_SLOTS = 4
+
+
+def _flood(seed0: int):
+    from repro.core.generate import random_kuniform
+    return [random_kuniform(n, e, p, seed=seed0 + i)
+            for i, (n, e, p) in enumerate(SHAPES * 2)]
+
+
+def _run_exact_caps(hgs):
+    from repro.core.partitioner import partition
+    return [partition(hg, omega=OMEGA, delta=DELTA, theta=THETA)
+            for hg in hgs]
+
+
+def _run_service(hgs, batch_slots, route_threshold=2048):
+    from repro.serve import PartitionService
+    svc = PartitionService(theta=THETA, batch_slots=batch_slots,
+                           route_threshold=route_threshold)
+    rids = [svc.submit(hg, omega=OMEGA, delta=DELTA) for hg in hgs]
+    res = svc.drain()
+    svc.close()
+    assert sorted(res) == sorted(rids), "lost rids"
+    return res
+
+
+def _bench(name, runner, note=""):
+    runner(_flood(1000))  # warmup: compile this policy's solve path
+    t0 = time.perf_counter()
+    res = runner(_flood(0))
+    dt = time.perf_counter() - t0
+    assert len(res) == N_REQ
+    derived = f"req_per_s={N_REQ / dt:.1f}"
+    return row(f"serve/partition_{name}", dt / N_REQ * 1e6,
+               derived + (f" {note}" if note else ""))
+
+
+def run():
+    yield _bench("sequential",
+                 lambda hgs: _run_service(hgs, batch_slots=1))
+    yield _bench("bucketed_vmap",
+                 lambda hgs: _run_service(hgs, batch_slots=BATCH_SLOTS))
+    yield _bench("exact_caps", _run_exact_caps,
+                 note="recompiles-per-novel-caps-chain")
+    # route_threshold below the request sizes: every request takes the
+    # host-driven V-cycle lane through the service scheduler
+    yield _bench("routed",
+                 lambda hgs: _run_service(hgs, batch_slots=BATCH_SLOTS,
+                                          route_threshold=32))

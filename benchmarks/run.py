@@ -13,13 +13,14 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig7,fig8,fig15,fig16,tab2,roofline,"
-                         "proofline,dist,dist_sort,serve_engine")
+                         "proofline,dist,dist_sort,serve_engine,"
+                         "partition_service")
     args = ap.parse_args(argv)
 
     from benchmarks import (dist_scaling, dist_sort, fig7_snn_comparison,
                             fig8_breakdown, fig15_kway, fig16_ablations,
-                            partitioner_roofline, roofline, serve_engine,
-                            tab2_work_span)
+                            partition_service, partitioner_roofline,
+                            roofline, serve_engine, tab2_work_span)
     mods = {
         "fig7": fig7_snn_comparison,
         "fig8": fig8_breakdown,
@@ -31,6 +32,7 @@ def main(argv=None) -> None:
         "dist": dist_scaling,
         "dist_sort": dist_sort,
         "serve_engine": serve_engine,
+        "partition_service": partition_service,
     }
     want = args.only.split(",") if args.only else list(mods)
     print("name,us_per_call,derived")

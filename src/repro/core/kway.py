@@ -27,7 +27,8 @@ from repro.core.hypergraph import (Caps, HostHypergraph,
                                    device_pair_count, host_from_device,
                                    host_pair_count)
 from repro.core.partitioner import (PartitionResult, _next_pow2,
-                                    make_coarsen_fns, make_refine_fn)
+                                    make_coarsen_fns, make_refine_fn,
+                                    run_coarsen_loop)
 from repro.core.refine import RefineParams
 
 BIG_DELTA = 2 ** 29
@@ -101,30 +102,16 @@ def partition_kway(hg: HostHypergraph, k: int, eps: float = 0.03,
     if coarse_target is None:
         coarse_target = min(4096, max(4 * k, 64))
 
-    levels, gammas, log = [], [], []
+    log: list = []
     _coarsen, _contract = make_coarsen_fns(cparams, plan, dist_coarsen,
                                            compensated=compensated_psum)
     t_coarsen = time.perf_counter()
-    coarsen_hits: list = []
-    while int(d.n_nodes) > coarse_target and len(gammas) < max_levels:
-        match, n_pairs, ovf = _coarsen(d, caps)
-        # one batched sync per level; audit before trusting the matches
-        pairs_live, nbr_entries, kern_hit, n_pairs_h = (
-            int(v) for v in jax.device_get([*ovf, n_pairs]))
-        check_expansion_caps(caps, pairs_live, nbr_entries)
-        if n_pairs_h == 0:
-            break
-        coarsen_hits.append(kern_hit)
-        d2, gamma = _contract(d, match, caps)
-        if collect_log:
-            log.append(dict(kind="coarsen", level=len(gammas),
-                            nodes=int(d.n_nodes), pairs=n_pairs_h))
-        levels.append(d)
-        gammas.append(gamma)
-        d = d2
-    # drain the dispatch tail so the phase timer doesn't leak into the
-    # host-side initial-partitioning step below
-    jax.block_until_ready((d, gammas))
+    # shared audited loop (one batched scalar sync + overflow audit per
+    # level); blocks the dispatch tail so the phase timer doesn't leak into
+    # the host-side initial-partitioning step below
+    d, caps, levels, gammas, coarsen_hits = run_coarsen_loop(
+        d, caps, coarse_target, max_levels, _coarsen, _contract,
+        log if collect_log else None)
     t_coarsen = time.perf_counter() - t_coarsen
     check_expansion_caps(caps, device_pair_count(d.edge_off))
 
@@ -152,10 +139,10 @@ def partition_kway(hg: HostHypergraph, k: int, eps: float = 0.03,
     parts, refine_hits_dev[len(levels)] = _refine(d, parts, caps, len(levels))
     for lvl in range(len(levels) - 1, -1, -1):
         g = gammas[lvl]
-        d_lvl = levels[lvl]
-        parts = jnp.where(jnp.arange(caps.n) < d_lvl.n_nodes,
-                          parts[jnp.clip(g, 0, caps.n - 1)], 0)
-        parts, refine_hits_dev[lvl] = _refine(d_lvl, parts, caps, lvl)
+        d_lvl, caps_lvl = levels[lvl]
+        parts = jnp.where(jnp.arange(caps_lvl.n) < d_lvl.n_nodes,
+                          parts[jnp.clip(g, 0, caps_lvl.n - 1)], 0)
+        parts, refine_hits_dev[lvl] = _refine(d_lvl, parts, caps_lvl, lvl)
     # block before reading the timer (the tail would otherwise drain in
     # np.asarray below, after the timer stopped)
     jax.block_until_ready(parts)

@@ -14,6 +14,7 @@ exactly once per input bucket.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 import time
 
@@ -111,6 +112,164 @@ def make_refine_fn(k, kcap: int, rparams: RefineParams, rlog,
     return _refine
 
 
+def run_coarsen_loop(d, caps: Caps, target: int, max_levels: int,
+                     _coarsen, _contract, log: list | None,
+                     shrink: bool = False):
+    """Host-driven audited coarsening loop shared by `partition` and
+    `kway.partition_kway`: per level, one batched device sync for the four
+    scalars, a `check_expansion_caps` overflow audit BEFORE trusting the
+    matches (the device pipelines drop out-of-capacity lanes silently), stop
+    on `n_pairs == 0` or `target`. Returns
+    ``(d, caps, levels, gammas, coarsen_hits)`` with ``levels`` a list of
+    ``(d, caps)`` per retained level (caps varies only under ``shrink``, the
+    pow2 re-bucketing mode). Blocks on the dispatch tail before returning so
+    the caller's phase timer doesn't leak into the next phase."""
+    from repro.core.hypergraph import shrink_device
+
+    levels, gammas, coarsen_hits = [], [], []
+    while int(d.n_nodes) > target and len(gammas) < max_levels:
+        match, n_pairs, ovf = _coarsen(d, caps)
+        pairs_live, nbr_entries, kern_hit, n_pairs_h = (
+            int(v) for v in jax.device_get([*ovf, n_pairs]))
+        check_expansion_caps(caps, pairs_live, nbr_entries)
+        if n_pairs_h == 0:
+            break
+        coarsen_hits.append(kern_hit)
+        d2, gamma = _contract(d, match, caps)
+        if log is not None:
+            log.append(dict(kind="coarsen", level=len(gammas),
+                            nodes=int(d.n_nodes), pairs=n_pairs_h,
+                            caps_n=caps.n))
+        levels.append((d, caps))
+        gammas.append(gamma)
+        d = d2
+        if shrink:
+            d, caps = shrink_device(d, caps)
+    jax.block_until_ready((d, gammas))
+    return d, caps, levels, gammas, coarsen_hits
+
+
+def vcycle_device(d, omega, delta, caps: Caps, kcap: int,
+                  n_cands: int = 4, theta: int = 16, max_levels: int = 16,
+                  chain_rounds: int = 16):
+    """Pure-device masked V-cycle: the whole multi-level solve as one traced
+    function with NO host round-trips — the vmap-friendly batched entry the
+    partition service (`serve.partition_service`) maps over padded request
+    batches.
+
+    The host driver's data-dependent level loop becomes a fixed-length
+    `lax.scan` over ``max_levels`` with per-level ``active`` masks: a level
+    whose coarsening stopped (``n_nodes <= ceil(n/omega)`` or zero matched
+    pairs) keeps its graph and partition unchanged, so the scan replays the
+    host loop's break semantics exactly (re-coarsening an unchanged graph is
+    deterministic, hence stays stopped). ``omega``/``delta`` are *traced*
+    int32 scalars — requests with different constraints share one compile.
+    ``caps``/``kcap`` are static: one jit signature per capacity bucket.
+    ``use_kernels`` is off (Pallas dispatch under vmap is out of scope — the
+    service batches small graphs where the segment path wins anyway).
+
+    Returns a dict of device values: ``parts [caps.n]`` (uncompacted,
+    0 beyond ``n_nodes``), ``n_parts`` (coarsest-level count, before
+    host-side id compaction), ``n_levels``, and the overflow diagnostics
+    ``pairs_live_max`` / ``nbr_entries_max`` — per-level maxima the caller
+    must audit host-side via `check_expansion_caps` (pair totals are
+    monotone under coarsening, so a passed level-0 audit already bounds
+    them; this is the defense-in-depth recheck).
+
+    Bit-exactness: at matching ``caps``/``kcap``/params this reproduces
+    `partition(...)` (bucket=False, use_kernels=False,
+    ``kcap_hint=kcap``) exactly — verified in
+    ``tests/test_partition_service.py``."""
+    from repro.core.coarsen import coarsen_step_impl
+    from repro.core.contract import contract_impl
+    from repro.core.refine import refine_step_impl
+
+    omega = jnp.asarray(omega, jnp.int32)
+    delta = jnp.asarray(delta, jnp.int32)
+    cparams = CoarsenParams(omega=omega, delta=delta, n_cands=n_cands,
+                            use_kernels=False)
+    rparams = RefineParams(omega=omega, delta=delta, theta=theta,
+                           use_kernels=False, chain_rounds=chain_rounds)
+    target = jnp.maximum(jnp.int32(1),
+                         (d.n_nodes + omega - jnp.int32(1)) // omega)
+
+    def coarsen_body(carry, _):
+        d, pmax, nmax = carry
+        entering = d.n_nodes > target
+        match, n_pairs, props = coarsen_step_impl(d, caps, cparams)
+        active = entering & (n_pairs > 0)
+        pmax = jnp.maximum(pmax, jnp.where(entering, props.n_pairs_live, 0))
+        nmax = jnp.maximum(nmax, jnp.where(entering, props.n_nbr_entries, 0))
+        d2, gamma = contract_impl(d, match, caps)
+        # inactive level: keep the graph — contract() of a stopped level
+        # would still re-canonicalize pin order, which must not happen
+        d_next = jax.tree.map(lambda a, b: jnp.where(active, a, b), d2, d)
+        return (d_next, pmax, nmax), (d, gamma, active)
+
+    (d, pmax, nmax), (levels_d, gammas, actives) = jax.lax.scan(
+        coarsen_body, (d, jnp.int32(0), jnp.int32(0)), None,
+        length=max_levels)
+    # the coarsest graph is refined but never re-enters coarsening: audit
+    # its pair expansion too (refinement expands the same pairs)
+    pmax = jnp.maximum(pmax, device_pair_count(d.edge_off))
+
+    k = d.n_nodes
+    parts = jnp.where(jnp.arange(caps.n) < k,
+                      jnp.arange(caps.n, dtype=jnp.int32), 0)
+
+    enforce = jnp.arange(theta) >= (theta // 2)
+
+    def refine_one_level(d_lvl, parts):
+        def rep(parts, enf):
+            parts2, _, _, _ = refine_step_impl(d_lvl, parts, k, caps, kcap,
+                                               rparams, enf)
+            return parts2, None
+        parts, _ = jax.lax.scan(rep, parts, enforce)
+        return parts
+
+    parts = refine_one_level(d, parts)  # coarsest level
+    coarse_cap = parts.shape[0]
+
+    def uncoarsen_body(parts, level):
+        d_lvl, gamma, active = level
+        proj = jnp.where(jnp.arange(caps.n) < d_lvl.n_nodes,
+                         parts[jnp.clip(gamma, 0, coarse_cap - 1)], 0)
+        parts_in = jnp.where(active, proj, parts)
+        refined = refine_one_level(d_lvl, parts_in)
+        return jnp.where(active, refined, parts), None
+
+    parts, _ = jax.lax.scan(uncoarsen_body, parts,
+                            (levels_d, gammas, actives), reverse=True)
+    return dict(parts=parts, n_parts=k,
+                n_levels=jnp.sum(actives.astype(jnp.int32)),
+                pairs_live_max=pmax, nbr_entries_max=nmax)
+
+
+@functools.lru_cache(maxsize=None)
+def _batch_solver(caps: Caps, kcap: int, n_cands: int, theta: int,
+                  max_levels: int, chain_rounds: int):
+    """One jitted vmapped solver per bucket signature (lru-cached so every
+    batch a bucket ever solves shares the same compiled executable)."""
+    return jax.jit(
+        jax.vmap(lambda d_, o_, dl_: vcycle_device(
+            d_, o_, dl_, caps, kcap, n_cands=n_cands, theta=theta,
+            max_levels=max_levels, chain_rounds=chain_rounds)))
+
+
+def partition_batch_device(batch, omega, delta, caps: Caps, kcap: int,
+                           n_cands: int = 4, theta: int = 16,
+                           max_levels: int = 16, chain_rounds: int = 16):
+    """vmap of `vcycle_device` over a stacked batch of capacity-padded
+    device hypergraphs (every leaf gains a leading batch axis; see
+    `serve.partition_service.stack_device_batch`). ``omega``/``delta`` are
+    ``[B]`` int32 vectors — per-request constraints inside one solve. One
+    jit cache entry per ``(caps, kcap, n_cands, theta, max_levels,
+    chain_rounds)`` bucket signature, shared across every batch the bucket
+    ever solves."""
+    return _batch_solver(caps, kcap, n_cands, theta, max_levels,
+                         chain_rounds)(batch, omega, delta)
+
+
 def partition(hg: HostHypergraph, omega: int, delta: int,
               n_cands: int = 4, theta: int = 16, use_kernels: bool = False,
               refine_params: RefineParams | None = None,
@@ -159,8 +318,6 @@ def partition(hg: HostHypergraph, omega: int, delta: int,
     not silently truncate: every level's live counts are audited host-side
     and overflow raises `CapacityError`.
     """
-    from repro.core.hypergraph import shrink_device
-
     t0 = time.perf_counter()
     caps = Caps.for_host(hg, pair_cap=pair_cap, nbr_cap=nbr_cap)
     # exact int64 level-0 audit before any device work: with this passed,
@@ -187,38 +344,16 @@ def partition(hg: HostHypergraph, omega: int, delta: int,
                             use_kernels=use_kernels, matching=matching)
 
     target = max(1, math.ceil(hg.n_nodes / omega))
-    levels, gammas = [], []
     log: list = []
     _coarsen, _contract = make_coarsen_fns(cparams, plan, dist_coarsen,
                                            compensated=compensated_psum)
     t_coarsen = time.perf_counter()
-    coarsen_hits: list = []
-    while int(d.n_nodes) > target and len(gammas) < max_levels:
-        match, n_pairs, ovf = _coarsen(d, caps)
-        # one batched sync for the level's four scalars, then audit
-        # BEFORE trusting the matches: the device pipelines drop
-        # out-of-capacity lanes silently, so an undersized Caps must raise
-        # here, not mis-partition
-        pairs_live, nbr_entries, kern_hit, n_pairs_h = (
-            int(v) for v in jax.device_get([*ovf, n_pairs]))
-        check_expansion_caps(caps, pairs_live, nbr_entries)
-        if n_pairs_h == 0:
-            break
-        coarsen_hits.append(kern_hit)
-        d2, gamma = _contract(d, match, caps)
-        if collect_log:
-            log.append(dict(kind="coarsen", level=len(gammas),
-                            nodes=int(d.n_nodes), pairs=n_pairs_h,
-                            caps_n=caps.n))
-        levels.append((d, caps))
-        gammas.append(gamma)
-        d = d2
-        if bucket:
-            d, caps = shrink_device(d, caps)
-    # drain the async dispatch tail before stopping the phase timer —
-    # otherwise the last contract finishes during refinement (or during
-    # the final np.asarray readback) and the phase columns under-report
-    jax.block_until_ready((d, gammas))
+    # run_coarsen_loop: per level one batched scalar sync + overflow audit
+    # BEFORE trusting the matches, then blocks the dispatch tail so the
+    # phase timer doesn't leak into refinement
+    d, caps, levels, gammas, coarsen_hits = run_coarsen_loop(
+        d, caps, target, max_levels, _coarsen, _contract,
+        log if collect_log else None, shrink=bucket)
     t_coarsen = time.perf_counter() - t_coarsen
     # the coarsest graph is refined below but never re-entered coarsening,
     # so audit its pair expansion (refinement's in-sequence gains expand

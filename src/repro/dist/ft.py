@@ -12,6 +12,7 @@ once relative to the restored state.
 """
 from __future__ import annotations
 
+import contextlib
 import threading
 import time
 from typing import Any, Callable
@@ -27,11 +28,18 @@ class StepWatchdog:
     One callback per arm: after firing, the watchdog disarms itself until
     the next `arm` call. The callback runs on the watchdog thread — keep it
     cheap (append to a list, set an event, signal an abort).
+
+    `fired_steps` records every step the watchdog fired for, and
+    `watch(step)` is the arm/disarm pair as a context manager — drivers
+    wrap each blocking device solve in `with wd.watch(step):` and check
+    `wd.fired_steps` afterwards to requeue stalled work (this is how
+    `serve.partition_service` turns a stall into a supervised restart).
     """
 
     def __init__(self, deadline_s: float, on_stall: Callable[[int], Any]):
         self.deadline_s = float(deadline_s)
         self.on_stall = on_stall
+        self.fired_steps: list[int] = []
         self._cv = threading.Condition()
         self._step: int | None = None
         self._deadline: float | None = None
@@ -51,6 +59,17 @@ class StepWatchdog:
             self._step = None
             self._deadline = None
             self._cv.notify_all()
+
+    @contextlib.contextmanager
+    def watch(self, step: int):
+        """Arm around a blocking unit of work; disarms on exit (even when
+        the work raises). After the block, `step in self.fired_steps` tells
+        whether the deadline elapsed while the work was still running."""
+        self.arm(step)
+        try:
+            yield self
+        finally:
+            self.disarm()
 
     def stop(self) -> None:
         with self._cv:
@@ -75,6 +94,7 @@ class StepWatchdog:
                 fire_step = self._step
                 self._step = None
                 self._deadline = None
+                self.fired_steps.append(fire_step)
             # outside the lock: the callback may call arm/disarm/stop
             self.on_stall(fire_step)
 

@@ -4,3 +4,8 @@ from repro.serve.paging import (  # noqa: F401
     PageManager,
     PagingSpec,
 )
+from repro.serve.partition_service import (  # noqa: F401
+    PartitionService,
+    ServiceResult,
+    stack_device_batch,
+)

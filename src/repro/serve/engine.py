@@ -63,6 +63,7 @@ class ServeEngine:
     page_size: int = 16
     n_pages: int = 0            # 0 -> n_slots * ceil(cache_len / page_size)
     policy: str = "continuous"  # "continuous" | "static"
+    admit_lookahead: int = 4    # page-starved queue heads step() may skip
     record_keys: bool = False   # keep (tag, key) of every sample for tests
 
     def __post_init__(self):
@@ -194,18 +195,22 @@ class ServeEngine:
         decode step for every active slot. Returns rids finished this step."""
         self._ensure()
         finished: list = []
-        # admission: prefill-insert into freed slots (MaxText idiom)
+        # admission: prefill-insert into freed slots (MaxText idiom). A
+        # page-starved head no longer blocks the whole queue: up to
+        # `admit_lookahead` starved heads are skipped so a smaller request
+        # behind them can take the free slot (skipped heads keep their
+        # queue positions, so admission order stays FIFO among fitters)
+        skipped: list = []
+        admitted = 0
         while self._queue and self._free_slots:
-            req = self._queue[0]
+            req = self._queue.popleft()
             need_tok = len(req.prompt) + self._pos_off + req.max_new
             if not self._pm.can_alloc(need_tok):
-                if self._active:
-                    break  # pages return at the next EOS; wait
-                raise paging.OutOfPagesError(
-                    f"request needs {self._pm.spec.pages_for(need_tok)} "
-                    f"pages but the idle pool has {self._pm.free_pages} "
-                    f"of {self.n_pages}")
-            self._queue.popleft()
+                skipped.append(req)
+                if len(skipped) > self.admit_lookahead:
+                    break  # bounded lookahead: wait for the next EOS
+                continue
+            admitted += 1
             slot = self._free_slots.pop()
             self._pm.alloc(slot, need_tok)
             dense = self._dense_zeros()
@@ -221,6 +226,15 @@ class ServeEngine:
             self._slot_tok[slot] = tok
             self._active[slot] = req
             self._commit(slot, req, tok, finished)
+        for req in reversed(skipped):
+            self._queue.appendleft(req)
+        if skipped and not self._active and not admitted:
+            need_tok = len(skipped[0].prompt) + self._pos_off \
+                + skipped[0].max_new
+            raise paging.OutOfPagesError(
+                f"request needs {self._pm.spec.pages_for(need_tok)} "
+                f"pages but the idle pool has {self._pm.free_pages} "
+                f"of {self.n_pages}")
         # decode: per-slot positions, paged KV scatter; freed slots' table
         # rows are sentinels, so their lanes are inert
         if self._active:
@@ -246,23 +260,56 @@ class ServeEngine:
 
     # ------------------------------------------------------- batched API
     def generate(self, prompts: np.ndarray, max_new: int = 32,
-                 extras: dict | None = None) -> np.ndarray:
+                 extras: dict | None = None,
+                 lengths: np.ndarray | None = None) -> np.ndarray:
         """prompts: [B, S0] int32 (left-aligned, pad with 0 to equal S0).
         Returns generated tokens [B, max_new]; positions after a sequence's
-        EOS are filled with `eos_id` (never pad-0)."""
+        EOS are filled with `eos_id` (never pad-0).
+
+        `lengths` ([B] true prompt lengths) overrides the default pad
+        inference (row length = last nonzero + 1) — pass it when pad-0 is a
+        legitimate trailing prompt token. On the continuous policy each row
+        is submitted at its TRUE length, so a short row pays short-prompt
+        positions, prefill, and page budget (the ragged-batch win). The
+        static policy still decodes the full padded [B, S0] block — pad-0
+        columns count as prompt there — so for ragged batches the two
+        policies see different prompts and their outputs are NOT expected to
+        match token-for-token; compare policies on equal-length batches.
+
+        generate() reseeds the engine RNG for per-call reproducibility, so
+        it refuses to run while streaming `submit()`/`step()` requests are
+        in flight (the reseed would silently clobber their sampling
+        streams); drain() first. Results of already-finished streaming
+        requests are preserved across the call."""
         prompts = np.asarray(prompts, np.int32)
         B, S0 = prompts.shape
-        self._validate(S0, max_new)
+        if lengths is None:
+            nonpad = prompts != 0
+            lengths = np.where(nonpad.any(axis=1),
+                               S0 - np.argmax(nonpad[:, ::-1], axis=1), 1)
+        lengths = np.asarray(lengths, np.int64).reshape(-1)
+        if lengths.shape[0] != B or (B and (lengths.min() < 1
+                                            or lengths.max() > S0)):
+            raise ValueError(
+                f"lengths must be [B={B}] in [1, {S0}], got {lengths}")
+        if self._active or self._queue:
+            raise RuntimeError(
+                f"generate() would reseed the RNG stream of "
+                f"{len(self._active)} active + {len(self._queue)} queued "
+                f"streaming request(s); drain() them first")
+        self._validate(int(lengths.max()) if B else S0, max_new)
         self._rng = jax.random.PRNGKey(self.seed)  # per-call reproducibility
         if self.policy == "static":
             return self._generate_static(prompts, max_new)
         self._ensure(B)
-        rids = [self.submit(prompts[i], max_new) for i in range(B)]
+        rids = [self.submit(prompts[i, :lengths[i]], max_new)
+                for i in range(B)]
         res = self.drain()
         out = np.full((B, max_new), self.eos_id, np.int32)
         for i, rid in enumerate(rids):
-            t = res[rid]
+            t = res.pop(rid)
             out[i, :len(t)] = t
+        self._results.update(res)  # uncollected streaming results survive
         return out
 
     def _generate_static(self, prompts: np.ndarray, max_new: int):

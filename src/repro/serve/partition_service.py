@@ -1,0 +1,367 @@
+"""Multi-tenant partition service: slot-scheduled batched partition solves.
+
+The paper's workload shape at production scale is not one giant hypergraph —
+it is a flood of small-to-medium partition requests (placement queries,
+circuit blocks, MoE cells), each carrying its own (Omega, Delta)
+constraints. `PartitionService` schedules that flood the same way
+`ServeEngine` schedules decode requests: `submit()` queues a request,
+`step()` admits queued work and runs one device solve, `drain()` loops to
+completion and delivers `{rid: ServiceResult}`.
+
+Scheduling policy (three lanes):
+
+* **Capacity buckets** — small/medium graphs are padded into a geometric
+  ladder of static `Caps` buckets (the PR-5 capacity machinery gives the
+  static shapes; `check_expansion_caps` audits placement, and a
+  `CapacityError` *bumps the request to the next bucket*). Requests sharing
+  a bucket are stacked and solved as ONE vmapped device batch
+  (`core.partitioner.partition_batch_device`) — per-request Omega/Delta are
+  traced vectors, so every batch a bucket ever sees shares a single jit
+  cache entry keyed on the bucket signature.
+* **Routed V-cycle** — graphs above `route_threshold` nodes (or too big for
+  any bucket) route to the existing host-driven multilevel solve
+  (`core.partitioner.partition`), mesh-sharded when the service holds a
+  `Plan` (`plan=`, `shard_graph=True` — the PR-5 memory-sharded storage).
+* **Supervision** — every blocking device solve is armed with
+  `dist.ft.StepWatchdog` (`with wd.watch(step):`). A solve that raises, is
+  killed by fault injection, or stalls past the deadline is *requeued* with
+  a per-request restart budget (`max_restarts`), so no submitted rid is
+  ever lost; the budget exhausting re-raises, mirroring `TrainSupervisor`.
+
+Results are delivered as `ServiceResult` (compacted parts + the same
+host-side `metrics.audit` the offline driver reports), so a bucket-solved
+request is indistinguishable from a solo `partition()` call to the caller.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics
+from repro.core.hypergraph import (Caps, CapacityError, DeviceHypergraph,
+                                   HostHypergraph, check_expansion_caps,
+                                   host_pair_count, packed_host_arrays)
+from repro.core.partitioner import partition, partition_batch_device
+from repro.dist.ft import StepWatchdog
+
+
+def stack_device_batch(hgs: list[HostHypergraph], caps: Caps
+                       ) -> DeviceHypergraph:
+    """Stack capacity-padded staging arrays of ``hgs`` into one device batch
+    (every `DeviceHypergraph` leaf gains a leading batch axis) — the input
+    shape `partition_batch_device` vmaps over."""
+    packed = [packed_host_arrays(hg, caps) for hg in hgs]
+    stacked = {k: jnp.asarray(np.stack([p[k] for p in packed]))
+               for k in packed[0]}
+    return DeviceHypergraph(**stacked)
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """Static solve signature: caps + partition-axis capacity + unrolled
+    level bound. One jit cache entry per distinct Bucket."""
+    caps: Caps
+    kcap: int
+    max_levels: int
+
+
+@dataclasses.dataclass
+class ServiceResult:
+    rid: int
+    parts: np.ndarray          # [n_nodes] compacted partition ids
+    n_parts: int
+    n_levels: int
+    connectivity: float
+    cut_net: float
+    audit: dict
+    route: str                 # "bucket" | "vcycle" | "vcycle-sharded"
+    bucket: Bucket | None      # the solving bucket (bucket route only)
+    restarts: int              # failed/stalled solves this request survived
+    bumps: int                 # capacity bumps to a bigger bucket
+
+
+@dataclasses.dataclass
+class _Request:
+    rid: int
+    hg: HostHypergraph
+    omega: int
+    delta: int
+    caps_exact: Caps | None    # None on the routed lane
+    bucket_i: int | None       # ladder index; None -> routed V-cycle
+    order: int                 # FIFO tie-break across lanes
+    restarts: int = 0
+    bumps: int = 0
+
+
+class PartitionService:
+    """See module docstring. Construction is cheap; device work happens in
+    `step()`/`drain()`.
+
+    Parameters
+    ----------
+    theta, n_cands, chain_rounds : solver params shared by every request
+        (they are part of the static bucket signature).
+    batch_slots : device-batch width per bucket solve; short batches pad by
+        repeating lane 0 (discarded), so B is static per bucket.
+    bucket_base : node capacity of the smallest bucket; ladder doubles up to
+        `route_threshold`.
+    route_threshold : graphs with more nodes (or that fit no bucket) take
+        the host-driven V-cycle, mesh-sharded when `plan` is set.
+    plan, shard_graph, race : forwarded to the routed `partition()` call.
+    deadline_s : `StepWatchdog` deadline per device solve.
+    max_restarts : per-request budget of failed/stalled solves before the
+        failure re-raises.
+    requeue_on_stall : a stalled-but-completed solve is discarded and
+        requeued while budget remains (the completed result may come from a
+        flaky device); with the budget spent the late result is accepted.
+    fault_hook : test-only injection point, called as ``hook(route, reqs)``
+        immediately before each device solve; a raise is treated exactly
+        like a solve failure.
+    """
+
+    def __init__(self, theta: int = 16, n_cands: int = 4,
+                 chain_rounds: int = 16, batch_slots: int = 4,
+                 bucket_base: int = 64, route_threshold: int = 2048,
+                 plan=None, shard_graph: bool = True, race: bool = True,
+                 deadline_s: float = 300.0, max_restarts: int = 3,
+                 requeue_on_stall: bool = True, fault_hook=None):
+        if batch_slots < 1:
+            raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
+        if bucket_base < 2:
+            raise ValueError(f"bucket_base must be >= 2, got {bucket_base}")
+        self.theta = theta
+        self.n_cands = n_cands
+        self.chain_rounds = chain_rounds
+        self.batch_slots = batch_slots
+        self.bucket_base = 1 << max(1, math.ceil(math.log2(bucket_base)))
+        self.route_threshold = route_threshold
+        self.plan = plan
+        self.shard_graph = shard_graph
+        self.race = race
+        self.deadline_s = deadline_s
+        self.max_restarts = max_restarts
+        self.requeue_on_stall = requeue_on_stall
+        self.fault_hook = fault_hook
+        # ladder indices 0..n_buckets-1; smallest bucket >= route_threshold
+        # closes the ladder (a graph may need its caps even with few nodes)
+        self.n_buckets = 1
+        while (self.bucket_base << (self.n_buckets - 1)) < route_threshold:
+            self.n_buckets += 1
+        self._backlogs: dict[int, collections.deque] = {}
+        self._routed: collections.deque = collections.deque()
+        self._results: dict[int, ServiceResult] = {}
+        self._next_rid = 0
+        self._next_order = 0
+        self._solve_no = 0
+        self._wd: StepWatchdog | None = None
+        self.stall_log: list[int] = []
+        self.stats = dict(batch_solves=0, routed_solves=0, restarts=0,
+                          stalls=0, bumps=0)
+
+    # ------------------------------------------------------------- buckets
+    def bucket(self, i: int) -> Bucket:
+        """Ladder bucket i: node cap `bucket_base << i`, companion caps by
+        fixed multipliers (pairs 16x nodes — dense graphs overflow this and
+        bump up the ladder via the placement audit). The multipliers are
+        deliberately tight: every level of the device scan computes at full
+        bucket caps, so padding slack is paid `max_levels` times over and a
+        ladder bump is cheaper than a fat bucket. The kernel tile fields
+        (d_max/h0/l0/u0) are zeroed: `vcycle_device` never dispatches the
+        Pallas kernels, and zeroing keeps the signature request-independent."""
+        n = self.bucket_base << i
+        caps = Caps(n=n, e=n, p=4 * n, pairs=16 * n, nbrs=16 * n)
+        return Bucket(caps=caps, kcap=n, max_levels=int(math.log2(n)) + 1)
+
+    def _place(self, hg: HostHypergraph, caps_exact: Caps,
+               min_bucket: int = 0) -> int | None:
+        """Smallest ladder bucket that fits, or None -> routed V-cycle.
+        `check_expansion_caps` is the placement audit: a `CapacityError`
+        (pair expansion over the bucket's cap) bumps to the next bucket."""
+        if hg.n_nodes > self.route_threshold:
+            return None
+        pair_need = host_pair_count(hg)
+        for i in range(min_bucket, self.n_buckets):
+            c = self.bucket(i).caps
+            if caps_exact.n > c.n or caps_exact.e > c.e or caps_exact.p > c.p:
+                continue
+            try:
+                check_expansion_caps(c, pair_need)
+            except CapacityError:
+                continue  # audit failure: bump to the next bucket
+            return i
+        return None
+
+    # ----------------------------------------------------- slot scheduler
+    def submit(self, hg: HostHypergraph, omega: int, delta: int) -> int:
+        """Queue one partition request; returns a request id whose
+        `ServiceResult` `step()`/`drain()` eventually deliver."""
+        if hg.n_nodes < 1:
+            raise ValueError("empty hypergraph")
+        rid = self._next_rid
+        self._next_rid += 1
+        routed = hg.n_nodes > self.route_threshold
+        caps_exact = None if routed else Caps.for_host(hg)
+        bucket_i = None if routed else self._place(hg, caps_exact)
+        req = _Request(rid=rid, hg=hg, omega=int(omega), delta=int(delta),
+                       caps_exact=caps_exact, bucket_i=bucket_i,
+                       order=self._next_order)
+        self._next_order += 1
+        self._enqueue(req)
+        return rid
+
+    def _enqueue(self, req: _Request) -> None:
+        if req.bucket_i is None:
+            self._routed.append(req)
+        else:
+            self._backlogs.setdefault(req.bucket_i, collections.deque()
+                                      ).append(req)
+
+    @property
+    def pending(self) -> int:
+        return len(self._routed) + sum(map(len, self._backlogs.values()))
+
+    def step(self) -> list[int]:
+        """Run one device solve for the oldest pending work: a stacked
+        bucket batch (up to `batch_slots` requests sharing one bucket) or
+        one routed V-cycle. Returns the rids finished this step."""
+        lanes: list[tuple[int, object]] = [
+            (dq[0].order, i) for i, dq in self._backlogs.items() if dq]
+        if self._routed:
+            lanes.append((self._routed[0].order, None))
+        if not lanes:
+            return []
+        _, pick = min(lanes)
+        if pick is None:
+            return self._solve_routed(self._routed.popleft())
+        dq = self._backlogs[pick]
+        reqs = [dq.popleft() for _ in range(min(self.batch_slots, len(dq)))]
+        return self._solve_bucket(pick, reqs)
+
+    def drain(self) -> dict[int, ServiceResult]:
+        """`step()` until no work is pending; returns and clears
+        {rid: ServiceResult}."""
+        while self.pending:
+            self.step()
+        out, self._results = self._results, {}
+        return out
+
+    def close(self) -> None:
+        if self._wd is not None:
+            self._wd.stop()
+            self._wd = None
+
+    # ------------------------------------------------------------- solves
+    def _watchdog(self) -> StepWatchdog:
+        if self._wd is None:
+            self._wd = StepWatchdog(self.deadline_s,
+                                    self.stall_log.append)
+        return self._wd
+
+    def _attempt(self, route: str, reqs: list[_Request], solve):
+        """Shared supervision wrapper: fault hook, watchdog arm, requeue on
+        failure/stall with the per-request restart budget. Returns the solve
+        output or None when the batch was requeued."""
+        wd = self._watchdog()
+        step_no = self._solve_no
+        self._solve_no += 1
+        try:
+            with wd.watch(step_no):
+                if self.fault_hook is not None:
+                    self.fault_hook(route, reqs)
+                out = solve()
+                jax.block_until_ready(out)
+        except Exception as e:  # noqa: BLE001 — any solve failure restarts
+            self._requeue_or_raise(reqs, e)
+            return None
+        if step_no in wd.fired_steps:
+            self.stats["stalls"] += 1
+            if (self.requeue_on_stall
+                    and all(r.restarts < self.max_restarts for r in reqs)):
+                # late result may come from a flaky device: discard + retry
+                self._requeue_or_raise(reqs)
+                return None
+        return out
+
+    def _requeue_or_raise(self, reqs: list[_Request],
+                          exc: Exception | None = None) -> None:
+        """Requeue every request with budget left, then re-raise if any
+        exhausted its budget (requeue-first so a budget-spent lane does not
+        drop its batchmates' rids)."""
+        exhausted = [r.rid for r in reqs if r.restarts >= self.max_restarts]
+        for r in reqs:
+            if r.restarts >= self.max_restarts:
+                continue
+            r.restarts += 1
+            self.stats["restarts"] += 1
+            self._enqueue(r)
+        if exhausted:
+            if exc is not None:
+                raise exc
+            raise RuntimeError(
+                f"restart budget exhausted for rids {exhausted}")
+
+    def _solve_bucket(self, i: int, reqs: list[_Request]) -> list[int]:
+        bucket = self.bucket(i)
+        lanes = reqs + [reqs[0]] * (self.batch_slots - len(reqs))
+        batch = stack_device_batch([r.hg for r in lanes], bucket.caps)
+        omega = np.asarray([r.omega for r in lanes], np.int32)
+        delta = np.asarray([r.delta for r in lanes], np.int32)
+        out = self._attempt("bucket", reqs, lambda: partition_batch_device(
+            batch, omega, delta, bucket.caps, bucket.kcap,
+            n_cands=self.n_cands, theta=self.theta,
+            max_levels=bucket.max_levels, chain_rounds=self.chain_rounds))
+        if out is None:
+            return []
+        self.stats["batch_solves"] += 1
+        host = {k: np.asarray(v) for k, v in out.items()}
+        finished = []
+        for lane, req in enumerate(reqs):
+            try:
+                # defense-in-depth recheck of the placement audit (the
+                # level-0 host audit + pair monotonicity already bound these)
+                check_expansion_caps(bucket.caps,
+                                     host["pairs_live_max"][lane],
+                                     host["nbr_entries_max"][lane])
+            except CapacityError:
+                req.bumps += 1
+                self.stats["bumps"] += 1
+                req.bucket_i = self._place(req.hg, req.caps_exact,
+                                           min_bucket=i + 1)
+                self._enqueue(req)
+                continue
+            parts = host["parts"][lane][: req.hg.n_nodes].astype(np.int64)
+            uniq, parts = np.unique(parts, return_inverse=True)
+            aud = metrics.audit(req.hg, parts, omega=req.omega,
+                                delta=req.delta)
+            self._results[req.rid] = ServiceResult(
+                rid=req.rid, parts=parts, n_parts=len(uniq),
+                n_levels=int(host["n_levels"][lane]),
+                connectivity=aud["connectivity"], cut_net=aud["cut_net"],
+                audit=aud, route="bucket", bucket=bucket,
+                restarts=req.restarts, bumps=req.bumps)
+            finished.append(req.rid)
+        return finished
+
+    def _solve_routed(self, req: _Request) -> list[int]:
+        route = "vcycle" if self.plan is None else "vcycle-sharded"
+        kwargs = dict(theta=self.theta, n_cands=self.n_cands,
+                      chain_rounds=self.chain_rounds)
+        if self.plan is not None:
+            kwargs.update(plan=self.plan, shard_graph=self.shard_graph,
+                          race=self.race)
+        res = self._attempt(route, [req], lambda: partition(
+            req.hg, omega=req.omega, delta=req.delta, **kwargs))
+        if res is None:
+            return []
+        self.stats["routed_solves"] += 1
+        self._results[req.rid] = ServiceResult(
+            rid=req.rid, parts=res.parts, n_parts=res.n_parts,
+            n_levels=res.n_levels, connectivity=res.connectivity,
+            cut_net=res.cut_net, audit=res.audit, route=route, bucket=None,
+            restarts=req.restarts, bumps=req.bumps)
+        return [req.rid]

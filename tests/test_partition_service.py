@@ -1,0 +1,211 @@
+"""Multi-tenant partition service: bucketed-vmap batch solves, capacity
+bumps, watchdog/fault requeue, routed V-cycle lane, and the batched device
+entry's bit-exact parity with the host-driven solve."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import generate
+from repro.core.hypergraph import Caps, device_from_host
+from repro.core.partitioner import (_next_pow2, partition,
+                                    partition_batch_device)
+from repro.serve import PartitionService, stack_device_batch
+
+OMEGA, DELTA, THETA = 16, 256, 4
+
+
+def _svc(**kw):
+    kw.setdefault("theta", THETA)
+    kw.setdefault("batch_slots", 4)
+    kw.setdefault("bucket_base", 64)
+    kw.setdefault("route_threshold", 256)
+    return PartitionService(**kw)
+
+
+def _flood(n_reqs, seed0=0, nodes=40):
+    return [generate.random_kuniform(nodes + 4 * i, 60, 4, seed=seed0 + i)
+            for i in range(n_reqs)]
+
+
+# ----------------------------------------------------- batched device entry
+def test_batched_entry_matches_partition_b1():
+    """B=1 `partition_batch_device` at exact caps is bit-identical to the
+    host-driven `partition()` with the matching kcap hint (the masked-scan
+    V-cycle is the same algorithm with the level loop moved on-device)."""
+    hg = generate.random_kuniform(48, 64, 4, seed=0)
+    caps = Caps.for_host(hg)
+    kcap = _next_pow2(caps.n)
+    batch = jax.tree.map(lambda x: x[None], device_from_host(hg, caps))
+    out = partition_batch_device(batch, np.array([8], np.int32),
+                                 np.array([64], np.int32), caps, kcap,
+                                 theta=THETA, max_levels=6)
+    parts_b = np.asarray(out["parts"])[0][: hg.n_nodes]
+    _, inv = np.unique(parts_b, return_inverse=True)
+    res = partition(hg, omega=8, delta=64, theta=THETA, max_levels=6,
+                    kcap_hint=kcap)
+    np.testing.assert_array_equal(inv, res.parts)
+    assert int(out["n_parts"][0]) == res.n_parts
+    assert int(out["n_levels"][0]) == res.n_levels
+
+
+def test_stack_device_batch_shapes():
+    hgs = _flood(3)
+    caps = Caps(n=64, e=128, p=512, pairs=2048, nbrs=2048)
+    batch = stack_device_batch(hgs, caps)
+    for leaf in jax.tree.leaves(batch):
+        assert leaf.shape[0] == 3
+    assert batch.edge_pins.shape == (3, caps.p)
+    assert np.array_equal(np.asarray(batch.n_nodes),
+                          [hg.n_nodes for hg in hgs])
+
+
+# --------------------------------------------------------- service scheduler
+def test_service_end_to_end_all_rids_valid():
+    svc = _svc()
+    hgs = _flood(5)
+    rids = [svc.submit(hg, omega=OMEGA, delta=DELTA) for hg in hgs]
+    res = svc.drain()
+    svc.close()
+    assert sorted(res) == sorted(rids)
+    for rid, hg in zip(rids, hgs):
+        r = res[rid]
+        assert r.route == "bucket"
+        assert r.parts.shape == (hg.n_nodes,)
+        assert r.audit["size_ok"] and r.audit["inbound_ok"]
+        assert r.n_parts == r.parts.max() + 1
+    # 5 requests over 4 batch slots: at least two stacked device solves
+    assert svc.stats["batch_solves"] >= 2
+    assert svc.pending == 0 and svc.drain() == {}
+
+
+def test_service_per_request_constraints_in_one_batch():
+    """Omega/Delta are traced per-lane vectors: one device batch solves
+    requests with different constraints, each audited against its own."""
+    svc = _svc()
+    hg = generate.random_kuniform(48, 64, 4, seed=3)
+    r1 = svc.submit(hg, omega=8, delta=DELTA)
+    r2 = svc.submit(hg, omega=24, delta=DELTA)
+    res = svc.drain()
+    svc.close()
+    assert svc.stats["batch_solves"] == 1  # same bucket -> one solve
+    assert res[r1].audit["max_size"] <= 8
+    assert res[r2].audit["max_size"] <= 24
+    # tighter Omega cannot yield fewer parts
+    assert res[r1].n_parts >= res[r2].n_parts
+
+
+def test_service_fault_injected_solve_requeues_no_lost_rids():
+    """Acceptance: a killed solve restarts and every submitted rid still
+    gets a result, with the restart visible in stats and per-result."""
+    calls = {"n": 0}
+
+    def hook(route, reqs):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("injected device loss")
+
+    svc = _svc(fault_hook=hook, max_restarts=2)
+    hgs = _flood(3, seed0=10)
+    rids = [svc.submit(hg, omega=OMEGA, delta=DELTA) for hg in hgs]
+    res = svc.drain()
+    svc.close()
+    assert sorted(res) == sorted(rids), "a killed solve lost rids"
+    assert svc.stats["restarts"] == 3  # all three lanes of the killed batch
+    assert all(res[r].restarts == 1 for r in rids)
+    assert all(res[r].audit["size_ok"] for r in rids)
+
+
+def test_service_restart_budget_exhausted_raises():
+    def hook(route, reqs):
+        raise RuntimeError("injected device loss")
+
+    svc = _svc(fault_hook=hook, max_restarts=1)
+    svc.submit(generate.random_kuniform(40, 60, 4, seed=0),
+               omega=OMEGA, delta=DELTA)
+    with pytest.raises(RuntimeError, match="injected"):
+        svc.drain()
+    svc.close()
+
+
+def test_service_watchdog_stall_requeues():
+    """A solve that outlives the watchdog deadline is recorded as a stall
+    and requeued (late result discarded); the retry delivers."""
+    calls = {"n": 0}
+
+    def hook(route, reqs):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            time.sleep(0.25)  # outlive the deadline inside the armed window
+
+    svc = _svc(fault_hook=hook, deadline_s=0.05, max_restarts=2)
+    rid = svc.submit(generate.random_kuniform(40, 60, 4, seed=1),
+                     omega=OMEGA, delta=DELTA)
+    res = svc.drain()
+    svc.close()
+    assert svc.stats["stalls"] >= 1
+    assert svc.stall_log  # on_stall callback observed the stuck solve no.
+    assert rid in res and res[rid].restarts >= 1
+    assert res[rid].audit["size_ok"]
+
+
+def test_service_bucket_bump_and_routing():
+    """Placement: pair expansion over a bucket's cap bumps the request up
+    the ladder (CapacityError audit), and over-threshold graphs skip the
+    ladder for the routed V-cycle lane."""
+    svc = _svc(route_threshold=2048)
+    # 12-uniform edges: pair expansion (120 * 12 * 11 = 15840) exceeds the
+    # pairs cap of every bucket below n=1024 (16n), so placement must bump
+    # up the ladder even though the graph has only 60 nodes
+    dense = generate.random_kuniform(60, 120, 12, seed=2)
+    svc.submit(dense, omega=OMEGA, delta=DELTA)
+    (bucket_i,) = svc._backlogs.keys()
+    assert bucket_i > 0
+    assert svc.bucket(bucket_i).caps.pairs >= 15840
+    svc.close()
+    svc = _svc()  # short ladder: route_threshold=256 tops out at pairs=8192
+    svc.submit(dense, omega=OMEGA, delta=DELTA)  # fits no bucket -> routed
+    big = generate.random_kuniform(300, 300, 4, seed=2)  # > route_threshold
+    svc.submit(big, omega=64, delta=DELTA)
+    assert not svc._backlogs and len(svc._routed) == 2
+    svc.close()
+
+
+@pytest.mark.slow
+def test_service_routed_matches_direct_partition():
+    """The routed lane is the existing host-driven solve: identical result
+    to calling `partition()` directly with the service's solver params."""
+    hg = generate.random_kuniform(64, 96, 4, seed=9)
+    svc = _svc(route_threshold=32)  # force the routed lane
+    rid = svc.submit(hg, omega=20, delta=512)
+    res = svc.drain()
+    svc.close()
+    assert res[rid].route == "vcycle"
+    direct = partition(hg, omega=20, delta=512, theta=THETA)
+    np.testing.assert_array_equal(res[rid].parts, direct.parts)
+    assert res[rid].audit == direct.audit
+
+
+@pytest.mark.slow
+def test_service_routed_sharded_inprocess_8dev():
+    """Over-threshold requests route to the mesh-sharded V-cycle
+    (`plan=`, `shard_graph=True`): same result as calling the sharded
+    `partition()` directly. Runs only under the CI forced-8 step."""
+    if len(jax.devices()) < 8:
+        pytest.skip("needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    from repro.dist.sharding import Plan
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    plan = Plan.make(mesh)
+    hg = generate.snn_smallworld(n_nodes=200, fanout=10, seed=7)
+    svc = _svc(route_threshold=64, plan=plan, shard_graph=True, race=False,
+               theta=8)
+    rid = svc.submit(hg, omega=32, delta=128)
+    res = svc.drain()
+    svc.close()
+    assert res[rid].route == "vcycle-sharded"
+    direct = partition(hg, omega=32, delta=128, theta=8, plan=plan,
+                       shard_graph=True, race=False)
+    np.testing.assert_array_equal(res[rid].parts, direct.parts)
+    assert res[rid].audit == direct.audit
+    assert res[rid].audit["size_ok"] and res[rid].audit["inbound_ok"]

@@ -185,6 +185,80 @@ def test_more_requests_than_slots_queue_and_finish():
         assert 1 <= len(res[rid]) <= 3 + i
 
 
+def test_generate_ragged_matches_solo_decode():
+    """Acceptance: generate() on a ragged pad-0 batch equals per-row solo
+    decode — padded rows must be stripped to their true lengths before
+    entering the continuous path (they used to decode at padded length)."""
+    eng, cfg = _engine(n_slots=3)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(2, cfg.vocab, size=(n,), dtype=np.int32)
+               for n in (4, 7, 11)]
+    solo = [np.asarray(_solo_tokens(eng, p, 12)) for p in prompts]
+    padded = np.zeros((3, 11), np.int32)
+    for i, p in enumerate(prompts):
+        padded[i, : len(p)] = p
+    out = eng.generate(padded, max_new=12)
+    for i, want in enumerate(solo):
+        np.testing.assert_array_equal(out[i, : len(want)], want)
+        assert (out[i, len(want):] == eng.eos_id).all()
+    # explicit lengths= bypasses pad inference with the same result
+    out2 = eng.generate(padded, max_new=12,
+                        lengths=[len(p) for p in prompts])
+    np.testing.assert_array_equal(out, out2)
+
+
+def test_generate_refuses_reseed_with_inflight_stream():
+    """Regression: generate() used to unconditionally reset self._rng,
+    silently clobbering the sampling stream of in-flight streaming
+    requests. It must refuse instead, leaving the stream untouched."""
+    eng, cfg = _engine(n_slots=2, temperature=1.0, record_keys=True)
+    eng.eos_id = cfg.vocab  # unreachable EOS: request stays in flight
+    rng = np.random.default_rng(8)
+    eng.submit(rng.integers(2, cfg.vocab, size=(5,), dtype=np.int32), 8)
+    eng.step()
+    n_keys = len(eng._keys_used)
+    rng_before = np.asarray(eng._rng).tobytes()
+    with pytest.raises(RuntimeError, match="reseed"):
+        eng.generate(rng.integers(2, cfg.vocab, size=(1, 4),
+                                  dtype=np.int32), max_new=4)
+    assert np.asarray(eng._rng).tobytes() == rng_before
+    assert len(eng._keys_used) == n_keys
+    # the stream continues unperturbed and the engine drains clean
+    res = eng.drain()
+    assert len(res) == 1
+    # finished-but-uncollected streaming results survive a generate() call
+    rid = eng.submit(rng.integers(2, cfg.vocab, size=(4,), dtype=np.int32), 3)
+    while rid not in eng._results:
+        eng.step()
+    eng.generate(rng.integers(2, cfg.vocab, size=(1, 4), dtype=np.int32),
+                 max_new=3)
+    assert rid in eng.drain()
+
+
+def test_admission_lookahead_skips_page_starved_head():
+    """Regression: a page-starved queue head used to block admission even
+    when a later, smaller request fit the free pages. Bounded lookahead
+    admits the small request past it; lookahead=0 keeps strict FIFO."""
+    def run(lookahead):
+        eng, cfg = _engine(n_slots=2, page_size=8, n_pages=3,
+                           admit_lookahead=lookahead)
+        eng.eos_id = cfg.vocab  # unreachable: deterministic lifetimes
+        rng = np.random.default_rng(9)
+        tok = lambda n: rng.integers(2, cfg.vocab, size=(n,), dtype=np.int32)
+        eng.submit(tok(6), 10)   # 16 tokens -> 2 pages
+        eng.step()               # active; 1 page (8 tokens) left
+        big = eng.submit(tok(10), 10)   # 20 tokens -> 3 pages: starved
+        small = eng.submit(tok(4), 3)   # 7 tokens -> 1 page: fits
+        eng.step()
+        admitted = {r.rid for r in eng._active.values()}
+        res = eng.drain()
+        assert sorted(res)[-2:] == [big, small]  # nobody starves forever
+        return small in admitted
+
+    assert run(lookahead=4), "small request must admit past starved head"
+    assert not run(lookahead=0), "lookahead=0 must keep strict FIFO"
+
+
 def test_out_of_pages_raises_when_idle():
     """A request that can never fit the page pool must raise, not deadlock."""
     eng, cfg = _engine(n_slots=2, page_size=16, n_pages=1)
