@@ -26,10 +26,17 @@ Warmup (compile) is excluded: each policy first solves a throwaway flood
 drawn from the same shape classes. The derived column is sustained req/s;
 the acceptance comparison is bucketed_vmap vs sequential.
 
+Smoke mode (REPRO_BENCH_SMOKE=1, set by ``benchmarks.run --smoke``) shrinks
+the flood to two shape classes and runs only the sequential + bucketed
+service lanes (skipping the compile-heavy exact-caps and routed lanes) —
+the CI metrics-smoke step uses it to produce a real ``--metrics-json``
+dump in seconds instead of minutes.
+
   PYTHONPATH=src python -m benchmarks.run --only partition_service
 """
 from __future__ import annotations
 
+import os
 import time
 
 from benchmarks.common import row
@@ -38,16 +45,27 @@ from benchmarks.common import row
 # All four classes place into the smallest service bucket (n=64), so the
 # bucketed policy runs the flood as two full four-lane batches.
 SHAPES = [(40, 56, 3), (48, 64, 4), (56, 60, 4), (64, 64, 3)]
-N_REQ = 2 * len(SHAPES)
 OMEGA, DELTA = 16, 256
 THETA = 4
 BATCH_SLOTS = 4
 
 
+def _smoke() -> bool:
+    return bool(os.environ.get("REPRO_BENCH_SMOKE"))
+
+
+def _shapes():
+    return SHAPES[:2] if _smoke() else SHAPES
+
+
+def _n_req() -> int:
+    return 2 * len(_shapes())
+
+
 def _flood(seed0: int):
     from repro.core.generate import random_kuniform
     return [random_kuniform(n, e, p, seed=seed0 + i)
-            for i, (n, e, p) in enumerate(SHAPES * 2)]
+            for i, (n, e, p) in enumerate(_shapes() * 2)]
 
 
 def _run_exact_caps(hgs):
@@ -57,9 +75,13 @@ def _run_exact_caps(hgs):
 
 
 def _run_service(hgs, batch_slots, route_threshold=2048):
+    from repro.obs import metrics as obs_metrics
     from repro.serve import PartitionService
+    # record into the global registry so `benchmarks.run --metrics-json`
+    # lane snapshots carry the service series
     svc = PartitionService(theta=THETA, batch_slots=batch_slots,
-                           route_threshold=route_threshold)
+                           route_threshold=route_threshold,
+                           registry=obs_metrics.REGISTRY)
     rids = [svc.submit(hg, omega=OMEGA, delta=DELTA) for hg in hgs]
     res = svc.drain()
     svc.close()
@@ -72,9 +94,9 @@ def _bench(name, runner, note=""):
     t0 = time.perf_counter()
     res = runner(_flood(0))
     dt = time.perf_counter() - t0
-    assert len(res) == N_REQ
-    derived = f"req_per_s={N_REQ / dt:.1f}"
-    return row(f"serve/partition_{name}", dt / N_REQ * 1e6,
+    assert len(res) == _n_req()
+    derived = f"req_per_s={_n_req() / dt:.1f}"
+    return row(f"serve/partition_{name}", dt / _n_req() * 1e6,
                derived + (f" {note}" if note else ""))
 
 
@@ -83,6 +105,8 @@ def run():
                  lambda hgs: _run_service(hgs, batch_slots=1))
     yield _bench("bucketed_vmap",
                  lambda hgs: _run_service(hgs, batch_slots=BATCH_SLOTS))
+    if _smoke():
+        return  # skip the compile-heavy baseline lanes in smoke mode
     yield _bench("exact_caps", _run_exact_caps,
                  note="recompiles-per-novel-caps-chain")
     # route_threshold below the request sizes: every request takes the

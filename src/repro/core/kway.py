@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import time
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +29,8 @@ from repro.core.partitioner import (PartitionResult, _next_pow2,
                                     make_coarsen_fns, make_refine_fn,
                                     run_coarsen_loop)
 from repro.core.refine import RefineParams
+from repro.obs import trace as otrace
+from repro.obs import vcycle as ovcycle
 
 BIG_DELTA = 2 ** 29
 
@@ -73,7 +74,8 @@ def partition_kway(hg: HostHypergraph, k: int, eps: float = 0.03,
                    race_seed: int = 0,
                    dist_coarsen: bool = True,
                    compensated_psum: bool = False,
-                   shard_graph: bool = False) -> PartitionResult:
+                   shard_graph: bool = False,
+                   collect_stats: bool = False) -> PartitionResult:
     """k-way balanced partitioning; cut-net results from minimizing
     connectivity, exactly as the paper frames it.
 
@@ -82,81 +84,114 @@ def partition_kway(hg: HostHypergraph, k: int, eps: float = 0.03,
     mesh-sharded via `dist.partition.coarsen_level`/`contract_level` and
     each refinement level as mesh-raced replicas with sharded pipelines via
     `dist.partition.refine_level`; `shard_graph` memory-shards the
-    pins-sized storage over the plan's "model" axis (`dist.graph`)."""
-    t0 = time.perf_counter()
+    pins-sized storage over the plan's "model" axis (`dist.graph`).
+    `collect_stats` populates the quality side of
+    `PartitionResult.level_stats` exactly as in `partitioner.partition`;
+    phase wall-times are recorded as a "partition_kway" span tree and
+    `timings` is a thin view over it."""
     omega = max(int((1 + eps) * hg.n_nodes / k), math.ceil(hg.n_nodes / k))
-    caps = Caps.for_host(hg)
-    # exact int64 level-0 audit (see partitioner.partition): with this
-    # passed the per-level int32 device counts below cannot wrap
-    check_expansion_caps(caps, host_pair_count(hg))
-    if shard_graph:
-        if plan is None or not dist_coarsen:
-            raise ValueError("shard_graph=True requires a Plan and "
-                             "dist_coarsen=True")
-        from repro.dist.graph import sharded_from_host
-        d = sharded_from_host(hg, caps, plan)
-    else:
-        d = device_from_host(hg, caps)
-    cparams = CoarsenParams(omega=omega, delta=BIG_DELTA, n_cands=n_cands,
-                            use_kernels=use_kernels)
-    if coarse_target is None:
-        coarse_target = min(4096, max(4 * k, 64))
+    with otrace.span("partition_kway", nodes=hg.n_nodes, edges=hg.n_edges,
+                     k=k, omega=omega) as sp_total:
+        with otrace.span("setup"):
+            caps = Caps.for_host(hg)
+            # exact int64 level-0 audit (see partitioner.partition): with
+            # this passed the per-level int32 device counts cannot wrap
+            check_expansion_caps(caps, host_pair_count(hg))
+            if shard_graph:
+                if plan is None or not dist_coarsen:
+                    raise ValueError("shard_graph=True requires a Plan and "
+                                     "dist_coarsen=True")
+                from repro.dist.graph import sharded_from_host
+                d = sharded_from_host(hg, caps, plan)
+            else:
+                d = device_from_host(hg, caps)
+        cparams = CoarsenParams(omega=omega, delta=BIG_DELTA,
+                                n_cands=n_cands, use_kernels=use_kernels)
+        if coarse_target is None:
+            coarse_target = min(4096, max(4 * k, 64))
 
-    log: list = []
-    _coarsen, _contract = make_coarsen_fns(cparams, plan, dist_coarsen,
-                                           compensated=compensated_psum)
-    t_coarsen = time.perf_counter()
-    # shared audited loop (one batched scalar sync + overflow audit per
-    # level); blocks the dispatch tail so the phase timer doesn't leak into
-    # the host-side initial-partitioning step below
-    d, caps, levels, gammas, coarsen_hits = run_coarsen_loop(
-        d, caps, coarse_target, max_levels, _coarsen, _contract,
-        log if collect_log else None)
-    t_coarsen = time.perf_counter() - t_coarsen
-    check_expansion_caps(caps, device_pair_count(d.edge_off))
+        log: list = []
+        _coarsen, _contract = make_coarsen_fns(cparams, plan, dist_coarsen,
+                                               compensated=compensated_psum)
+        # shared audited loop (one batched scalar sync + overflow audit per
+        # level); blocks the dispatch tail so the phase span doesn't leak
+        # into the host-side initial-partitioning step below
+        with otrace.span("coarsen") as sp_coarsen:
+            d, caps, levels, gammas, coarsen_hits, coarsen_meta = \
+                run_coarsen_loop(d, caps, coarse_target, max_levels,
+                                 _coarsen, _contract,
+                                 log if collect_log else None)
+        check_expansion_caps(caps, device_pair_count(d.edge_off))
 
-    # ---- initial k-way on the coarsest graph (host, tiny) ----------------
-    if shard_graph:
-        from repro.dist.graph import host_from_sharded
-        coarse_host = host_from_sharded(d)
-    else:
-        coarse_host = host_from_device(d)
-    coarse_sizes = np.asarray(d.node_size)[: coarse_host.n_nodes]
-    init = greedy_initial_kway(coarse_host, coarse_sizes, k, omega)
-    kcap = _next_pow2(k)
-    parts = jnp.zeros((caps.n,), jnp.int32)
-    parts = parts.at[: coarse_host.n_nodes].set(jnp.asarray(init, jnp.int32))
+        # ---- initial k-way on the coarsest graph (host, tiny) ------------
+        with otrace.span("initial_kway"):
+            if shard_graph:
+                from repro.dist.graph import host_from_sharded
+                coarse_host = host_from_sharded(d)
+            else:
+                coarse_host = host_from_device(d)
+            coarse_sizes = np.asarray(d.node_size)[: coarse_host.n_nodes]
+            init = greedy_initial_kway(coarse_host, coarse_sizes, k, omega)
+            kcap = _next_pow2(k)
+            parts = jnp.zeros((caps.n,), jnp.int32)
+            parts = parts.at[: coarse_host.n_nodes].set(
+                jnp.asarray(init, jnp.int32))
 
-    rparams = RefineParams(omega=omega,
-                           delta=BIG_DELTA if not check_delta else BIG_DELTA,
-                           theta=theta, use_kernels=use_kernels)
+        rparams = RefineParams(omega=omega,
+                               delta=BIG_DELTA if not check_delta
+                               else BIG_DELTA,
+                               theta=theta, use_kernels=use_kernels)
 
-    t_refine = time.perf_counter()
-    rlog: list | None = [] if collect_log else None
-    _refine = make_refine_fn(k, kcap, rparams, rlog, plan, race, race_seed)
+        rlog: list | None = [] if collect_log else None
+        _refine = make_refine_fn(k, kcap, rparams, rlog, plan, race,
+                                 race_seed)
 
-    refine_hits_dev: dict = {}
-    parts, refine_hits_dev[len(levels)] = _refine(d, parts, caps, len(levels))
-    for lvl in range(len(levels) - 1, -1, -1):
-        g = gammas[lvl]
-        d_lvl, caps_lvl = levels[lvl]
-        parts = jnp.where(jnp.arange(caps_lvl.n) < d_lvl.n_nodes,
-                          parts[jnp.clip(g, 0, caps_lvl.n - 1)], 0)
-        parts, refine_hits_dev[lvl] = _refine(d_lvl, parts, caps_lvl, lvl)
-    # block before reading the timer (the tail would otherwise drain in
-    # np.asarray below, after the timer stopped)
-    jax.block_until_ready(parts)
-    t_refine = time.perf_counter() - t_refine
-    refine_hits = [int(v) for v in jax.device_get(
-        [refine_hits_dev[i] for i in range(len(levels) + 1)])]
+        refine_meta: dict = {len(levels): dict(structure=dict(
+            nodes=coarse_host.n_nodes, edges=int(d.n_edges),
+            pins=int(d.n_pins)))}
+        quality_dev: dict = {}
+        refine_hits_dev: dict = {}
+        with otrace.span("refine") as sp_refine:
+            with otrace.span("refine_level", level=len(levels)):
+                parts, refine_hits_dev[len(levels)] = _refine(
+                    d, parts, caps, len(levels))
+            if collect_stats:
+                quality_dev[len(levels)] = ovcycle.quality_scalars(
+                    d, parts, caps, kcap, omega, BIG_DELTA)
+            for lvl in range(len(levels) - 1, -1, -1):
+                g = gammas[lvl]
+                d_lvl, caps_lvl = levels[lvl]
+                with otrace.span("refine_level", level=lvl):
+                    parts = jnp.where(
+                        jnp.arange(caps_lvl.n) < d_lvl.n_nodes,
+                        parts[jnp.clip(g, 0, caps_lvl.n - 1)], 0)
+                    parts, refine_hits_dev[lvl] = _refine(d_lvl, parts,
+                                                          caps_lvl, lvl)
+                if collect_stats:
+                    quality_dev[lvl] = ovcycle.quality_scalars(
+                        d_lvl, parts, caps_lvl, kcap, omega, BIG_DELTA)
+            # block before the span closes (the tail would otherwise drain
+            # in np.asarray below, after the timer stopped)
+            jax.block_until_ready(parts)
+        hits_h, quality_h = jax.device_get(
+            ([refine_hits_dev[i] for i in range(len(levels) + 1)],
+             quality_dev))
+        refine_hits = [int(v) for v in hits_h]
+        for lvl in range(len(levels) + 1):
+            refine_meta.setdefault(lvl, {})
+            refine_meta[lvl]["kernel_refine"] = refine_hits[lvl]
+            refine_meta[lvl]["quality"] = quality_h.get(lvl)
 
-    parts_np = np.asarray(parts)[: hg.n_nodes].astype(np.int64)
-    aud = metrics.audit(hg, parts_np, omega=omega, delta=BIG_DELTA)
-    aud["balance_eps"] = metrics.balance_epsilon(parts_np, k)
+        with otrace.span("audit"):
+            parts_np = np.asarray(parts)[: hg.n_nodes].astype(np.int64)
+            aud = metrics.audit(hg, parts_np, omega=omega, delta=BIG_DELTA)
+            aud["balance_eps"] = metrics.balance_epsilon(parts_np, k)
     return PartitionResult(
-        parts=parts_np, n_parts=int(parts_np.max()) + 1, n_levels=len(gammas),
+        parts=parts_np, n_parts=int(parts_np.max()) + 1,
+        n_levels=len(gammas),
         connectivity=aud["connectivity"], cut_net=aud["cut_net"], audit=aud,
-        timings=dict(total=time.perf_counter() - t0, coarsen=t_coarsen,
-                     refine=t_refine),
+        timings=dict(total=sp_total.duration, coarsen=sp_coarsen.duration,
+                     refine=sp_refine.duration),
         level_log=(log or []) + (rlog or []),
-        kernel_path=dict(coarsen=coarsen_hits, refine=refine_hits))
+        kernel_path=dict(coarsen=coarsen_hits, refine=refine_hits),
+        level_stats=ovcycle.assemble(coarsen_meta, refine_meta))

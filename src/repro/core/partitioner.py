@@ -16,7 +16,6 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-import time
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +28,8 @@ from repro.core.hypergraph import (Caps, HostHypergraph,
                                    check_expansion_caps, device_from_host,
                                    device_pair_count, host_pair_count)
 from repro.core.refine import RefineParams, refine_level
+from repro.obs import trace as otrace
+from repro.obs import vcycle as ovcycle
 
 
 @dataclasses.dataclass
@@ -39,6 +40,8 @@ class PartitionResult:
     connectivity: float
     cut_net: float
     audit: dict
+    # thin view over the span tree (same floats): kept for API compat, the
+    # span tree (repro.obs.trace) is the source of truth for phase timing
     timings: dict
     level_log: list
     # per-level Pallas dispatch coverage (empty when use_kernels=False):
@@ -46,6 +49,9 @@ class PartitionResult:
     #   "refine":  [kernel reps (0..theta) per refined level, finest first;
     #               the last entry is the coarsest level]
     kernel_path: dict = dataclasses.field(default_factory=dict)
+    # per-level telemetry (repro.obs.vcycle.LevelStats, finest first;
+    # quality fields populated under collect_stats=True)
+    level_stats: list = dataclasses.field(default_factory=list)
 
 
 def _next_pow2(x: int) -> int:
@@ -120,33 +126,45 @@ def run_coarsen_loop(d, caps: Caps, target: int, max_levels: int,
     scalars, a `check_expansion_caps` overflow audit BEFORE trusting the
     matches (the device pipelines drop out-of-capacity lanes silently), stop
     on `n_pairs == 0` or `target`. Returns
-    ``(d, caps, levels, gammas, coarsen_hits)`` with ``levels`` a list of
-    ``(d, caps)`` per retained level (caps varies only under ``shrink``, the
-    pow2 re-bucketing mode). Blocks on the dispatch tail before returning so
-    the caller's phase timer doesn't leak into the next phase."""
+    ``(d, caps, levels, gammas, coarsen_hits, coarsen_meta)`` with
+    ``levels`` a list of ``(d, caps)`` per retained level (caps varies only
+    under ``shrink``, the pow2 re-bucketing mode) and ``coarsen_meta`` one
+    structural-stats dict per retained level (nodes/edges/pins, live pair
+    and neighborhood counts with their capacity occupancy, kernel path) —
+    assembled from the same batched per-level sync, so telemetry adds no
+    round-trips. Blocks on the dispatch tail before returning so the
+    caller's phase timer doesn't leak into the next phase."""
     from repro.core.hypergraph import shrink_device
 
-    levels, gammas, coarsen_hits = [], [], []
+    levels, gammas, coarsen_hits, coarsen_meta = [], [], [], []
     while int(d.n_nodes) > target and len(gammas) < max_levels:
-        match, n_pairs, ovf = _coarsen(d, caps)
-        pairs_live, nbr_entries, kern_hit, n_pairs_h = (
-            int(v) for v in jax.device_get([*ovf, n_pairs]))
-        check_expansion_caps(caps, pairs_live, nbr_entries)
-        if n_pairs_h == 0:
-            break
-        coarsen_hits.append(kern_hit)
-        d2, gamma = _contract(d, match, caps)
-        if log is not None:
-            log.append(dict(kind="coarsen", level=len(gammas),
-                            nodes=int(d.n_nodes), pairs=n_pairs_h,
-                            caps_n=caps.n))
-        levels.append((d, caps))
-        gammas.append(gamma)
-        d = d2
-        if shrink:
-            d, caps = shrink_device(d, caps)
+        with otrace.span("coarsen_level", level=len(gammas)):
+            match, n_pairs, ovf = _coarsen(d, caps)
+            (pairs_live, nbr_entries, kern_hit, n_pairs_h, nodes_h, edges_h,
+             pins_h) = (int(v) for v in jax.device_get(
+                 [*ovf, n_pairs, d.n_nodes, d.n_edges, d.n_pins]))
+            check_expansion_caps(caps, pairs_live, nbr_entries)
+            if n_pairs_h == 0:
+                break
+            coarsen_hits.append(kern_hit)
+            coarsen_meta.append(dict(
+                nodes=nodes_h, edges=edges_h, pins=pins_h,
+                pairs_live=pairs_live, nbr_entries=nbr_entries,
+                pair_occupancy=pairs_live / caps.pairs,
+                nbr_occupancy=nbr_entries / caps.nbrs,
+                kernel_coarsen=kern_hit))
+            d2, gamma = _contract(d, match, caps)
+            if log is not None:
+                log.append(dict(kind="coarsen", level=len(gammas),
+                                nodes=nodes_h, pairs=n_pairs_h,
+                                caps_n=caps.n))
+            levels.append((d, caps))
+            gammas.append(gamma)
+            d = d2
+            if shrink:
+                d, caps = shrink_device(d, caps)
     jax.block_until_ready((d, gammas))
-    return d, caps, levels, gammas, coarsen_hits
+    return d, caps, levels, gammas, coarsen_hits, coarsen_meta
 
 
 def vcycle_device(d, omega, delta, caps: Caps, kcap: int,
@@ -284,7 +302,8 @@ def partition(hg: HostHypergraph, omega: int, delta: int,
               compensated_psum: bool = False,
               shard_graph: bool = False,
               pair_cap: int | None = None,
-              nbr_cap: int | None = None) -> PartitionResult:
+              nbr_cap: int | None = None,
+              collect_stats: bool = False) -> PartitionResult:
     """Full multi-level constrained partitioning (paper's SNN mode).
 
     bucket=True enables pow2 capacity re-bucketing between levels (perf
@@ -317,100 +336,142 @@ def partition(hg: HostHypergraph, omega: int, delta: int,
     neighborhood capacities (e.g. to bound memory). Undersizing them does
     not silently truncate: every level's live counts are audited host-side
     and overflow raises `CapacityError`.
+
+    collect_stats=True additionally populates the quality side of
+    `PartitionResult.level_stats` (per-level connectivity/cut of the
+    projected partition, block-size and distinct-incident-hyperedge slack
+    vs Omega/Delta — `repro.obs.vcycle`): a few extra device reductions per
+    level, fetched in one batched readback at the end. Telemetry only reads
+    the solve's values, so results are bit-identical either way (tested).
+    Phase wall-times are recorded as an `repro.obs.trace` span tree
+    ("partition" > setup/coarsen/refine/audit); the ``timings`` dict on the
+    result is a thin view over the same spans.
     """
-    t0 = time.perf_counter()
-    caps = Caps.for_host(hg, pair_cap=pair_cap, nbr_cap=nbr_cap)
-    # exact int64 level-0 audit before any device work: with this passed,
-    # pair monotonicity under coarsening bounds every level's count by
-    # caps.pairs < 2**31, making the per-level int32 device counts exact
-    check_expansion_caps(caps, host_pair_count(hg))
-    if shard_graph:
-        if plan is None:
-            raise ValueError("shard_graph=True requires a Plan (mesh) — "
-                             "graph stripes live on its 'model' axis")
-        if not dist_coarsen:
-            raise ValueError("shard_graph=True requires dist_coarsen=True: "
-                             "the single-device coarsen path cannot read "
-                             "memory-sharded storage")
-        if bucket:
-            raise ValueError("bucket=True is incompatible with "
-                             "shard_graph=True: capacity re-bucketing would "
-                             "re-slice the fixed stripe layout")
-        from repro.dist.graph import sharded_from_host
-        d = sharded_from_host(hg, caps, plan)
-    else:
-        d = device_from_host(hg, caps)
-    cparams = CoarsenParams(omega=omega, delta=delta, n_cands=n_cands,
-                            use_kernels=use_kernels, matching=matching)
+    with otrace.span("partition", nodes=hg.n_nodes, edges=hg.n_edges,
+                     pins=hg.n_pins, omega=omega, delta=delta) as sp_total:
+        with otrace.span("setup"):
+            caps = Caps.for_host(hg, pair_cap=pair_cap, nbr_cap=nbr_cap)
+            # exact int64 level-0 audit before any device work: with this
+            # passed, pair monotonicity under coarsening bounds every
+            # level's count by caps.pairs < 2**31, making the per-level
+            # int32 device counts exact
+            check_expansion_caps(caps, host_pair_count(hg))
+            if shard_graph:
+                if plan is None:
+                    raise ValueError(
+                        "shard_graph=True requires a Plan (mesh) — "
+                        "graph stripes live on its 'model' axis")
+                if not dist_coarsen:
+                    raise ValueError(
+                        "shard_graph=True requires dist_coarsen=True: "
+                        "the single-device coarsen path cannot read "
+                        "memory-sharded storage")
+                if bucket:
+                    raise ValueError(
+                        "bucket=True is incompatible with shard_graph=True: "
+                        "capacity re-bucketing would re-slice the fixed "
+                        "stripe layout")
+                from repro.dist.graph import sharded_from_host
+                d = sharded_from_host(hg, caps, plan)
+            else:
+                d = device_from_host(hg, caps)
+        cparams = CoarsenParams(omega=omega, delta=delta, n_cands=n_cands,
+                                use_kernels=use_kernels, matching=matching)
 
-    target = max(1, math.ceil(hg.n_nodes / omega))
-    log: list = []
-    _coarsen, _contract = make_coarsen_fns(cparams, plan, dist_coarsen,
-                                           compensated=compensated_psum)
-    t_coarsen = time.perf_counter()
-    # run_coarsen_loop: per level one batched scalar sync + overflow audit
-    # BEFORE trusting the matches, then blocks the dispatch tail so the
-    # phase timer doesn't leak into refinement
-    d, caps, levels, gammas, coarsen_hits = run_coarsen_loop(
-        d, caps, target, max_levels, _coarsen, _contract,
-        log if collect_log else None, shrink=bucket)
-    t_coarsen = time.perf_counter() - t_coarsen
-    # the coarsest graph is refined below but never re-entered coarsening,
-    # so audit its pair expansion (refinement's in-sequence gains expand
-    # the same pairs) — every earlier level was audited in the loop
-    check_expansion_caps(caps, device_pair_count(d.edge_off))
+        target = max(1, math.ceil(hg.n_nodes / omega))
+        log: list = []
+        _coarsen, _contract = make_coarsen_fns(cparams, plan, dist_coarsen,
+                                               compensated=compensated_psum)
+        # run_coarsen_loop: per level one batched scalar sync + overflow
+        # audit BEFORE trusting the matches, then blocks the dispatch tail
+        # so the phase span doesn't leak into refinement
+        with otrace.span("coarsen") as sp_coarsen:
+            d, caps, levels, gammas, coarsen_hits, coarsen_meta = \
+                run_coarsen_loop(d, caps, target, max_levels, _coarsen,
+                                 _contract, log if collect_log else None,
+                                 shrink=bucket)
+        # the coarsest graph is refined below but never re-entered
+        # coarsening, so audit its pair expansion (refinement's in-sequence
+        # gains expand the same pairs) — every earlier level was audited in
+        # the loop
+        check_expansion_caps(caps, device_pair_count(d.edge_off))
 
-    # initial partitioning == coarsest clusters (Sec. III)
-    k = int(d.n_nodes)
-    if kcap_hint is None:
-        kcap = _next_pow2(k)
-    else:
-        if kcap_hint < k:
-            raise ValueError(
-                f"kcap_hint={kcap_hint} is below the coarsest partition "
-                f"count k={k}: partition ids would be silently clipped. "
-                f"Pass kcap_hint >= k (or None for the default pow2).")
-        kcap = kcap_hint
-    parts = jnp.where(jnp.arange(caps.n) < k,
-                      jnp.arange(caps.n, dtype=jnp.int32), 0)
+        # initial partitioning == coarsest clusters (Sec. III)
+        k = int(d.n_nodes)
+        if kcap_hint is None:
+            kcap = _next_pow2(k)
+        else:
+            if kcap_hint < k:
+                raise ValueError(
+                    f"kcap_hint={kcap_hint} is below the coarsest partition "
+                    f"count k={k}: partition ids would be silently clipped. "
+                    f"Pass kcap_hint >= k (or None for the default pow2).")
+            kcap = kcap_hint
+        parts = jnp.where(jnp.arange(caps.n) < k,
+                          jnp.arange(caps.n, dtype=jnp.int32), 0)
 
-    rparams = refine_params or RefineParams(
-        omega=omega, delta=delta, theta=theta, use_kernels=use_kernels,
-        chain_rounds=chain_rounds)
+        rparams = refine_params or RefineParams(
+            omega=omega, delta=delta, theta=theta, use_kernels=use_kernels,
+            chain_rounds=chain_rounds)
 
-    t_refine = time.perf_counter()
-    rlog: list | None = [] if collect_log else None
-    _refine = make_refine_fn(k, kcap, rparams, rlog, plan, race, race_seed)
+        rlog: list | None = [] if collect_log else None
+        _refine = make_refine_fn(k, kcap, rparams, rlog, plan, race,
+                                 race_seed)
 
-    # refine the coarsest level too, then every uncoarsened level; kernel
-    # hits stay device scalars until the single batched readback below
-    refine_hits_dev: dict = {}
-    parts, refine_hits_dev[len(levels)] = _refine(d, parts, caps, len(levels))
-    for lvl in range(len(levels) - 1, -1, -1):
-        g = gammas[lvl]
-        d_lvl, caps_lvl = levels[lvl]
-        coarse_cap = parts.shape[0]
-        parts = jnp.where(jnp.arange(caps_lvl.n) < d_lvl.n_nodes,
-                          parts[jnp.clip(g[: caps_lvl.n], 0,
-                                         coarse_cap - 1)], 0)
-        parts, refine_hits_dev[lvl] = _refine(d_lvl, parts, caps_lvl, lvl)
-        if collect_log:
-            log.append(dict(kind="refine", level=lvl))
-    # block before reading the timer: the refine tail would otherwise
-    # drain inside np.asarray(parts) below, after t_refine stopped
-    jax.block_until_ready(parts)
-    t_refine = time.perf_counter() - t_refine
-    refine_hits = [int(v) for v in jax.device_get(
-        [refine_hits_dev[i] for i in range(len(levels) + 1)])]
+        refine_meta: dict = {len(levels): dict(structure=dict(
+            nodes=k, edges=int(d.n_edges), pins=int(d.n_pins)))}
 
-    parts_np = np.asarray(parts)[: hg.n_nodes].astype(np.int64)
-    # compact partition ids (refinement may empty some partitions)
-    uniq, parts_np = np.unique(parts_np, return_inverse=True)
-    aud = metrics.audit(hg, parts_np, omega=omega, delta=delta)
+        # refine the coarsest level too, then every uncoarsened level;
+        # kernel hits and quality scalars stay device values until the
+        # single batched readback below — telemetry adds no per-level syncs
+        quality_dev: dict = {}
+        refine_hits_dev: dict = {}
+        with otrace.span("refine") as sp_refine:
+            with otrace.span("refine_level", level=len(levels)):
+                parts, refine_hits_dev[len(levels)] = _refine(
+                    d, parts, caps, len(levels))
+            if collect_stats:
+                quality_dev[len(levels)] = ovcycle.quality_scalars(
+                    d, parts, caps, kcap, omega, delta)
+            for lvl in range(len(levels) - 1, -1, -1):
+                g = gammas[lvl]
+                d_lvl, caps_lvl = levels[lvl]
+                coarse_cap = parts.shape[0]
+                with otrace.span("refine_level", level=lvl):
+                    parts = jnp.where(
+                        jnp.arange(caps_lvl.n) < d_lvl.n_nodes,
+                        parts[jnp.clip(g[: caps_lvl.n], 0,
+                                       coarse_cap - 1)], 0)
+                    parts, refine_hits_dev[lvl] = _refine(d_lvl, parts,
+                                                          caps_lvl, lvl)
+                if collect_stats:
+                    quality_dev[lvl] = ovcycle.quality_scalars(
+                        d_lvl, parts, caps_lvl, kcap, omega, delta)
+                if collect_log:
+                    log.append(dict(kind="refine", level=lvl))
+            # block before the span closes: the refine tail would otherwise
+            # drain inside np.asarray(parts) below, after the timer stopped
+            jax.block_until_ready(parts)
+        # ONE batched readback for the kernel hits + quality scalars
+        hits_h, quality_h = jax.device_get(
+            ([refine_hits_dev[i] for i in range(len(levels) + 1)],
+             quality_dev))
+        refine_hits = [int(v) for v in hits_h]
+        for lvl in range(len(levels) + 1):
+            refine_meta.setdefault(lvl, {})
+            refine_meta[lvl]["kernel_refine"] = refine_hits[lvl]
+            refine_meta[lvl]["quality"] = quality_h.get(lvl)
+
+        with otrace.span("audit"):
+            parts_np = np.asarray(parts)[: hg.n_nodes].astype(np.int64)
+            # compact partition ids (refinement may empty some partitions)
+            uniq, parts_np = np.unique(parts_np, return_inverse=True)
+            aud = metrics.audit(hg, parts_np, omega=omega, delta=delta)
     return PartitionResult(
         parts=parts_np, n_parts=len(uniq), n_levels=len(gammas),
         connectivity=aud["connectivity"], cut_net=aud["cut_net"], audit=aud,
-        timings=dict(total=time.perf_counter() - t0, coarsen=t_coarsen,
-                     refine=t_refine),
+        timings=dict(total=sp_total.duration, coarsen=sp_coarsen.duration,
+                     refine=sp_refine.duration),
         level_log=(log or []) + (rlog or []),
-        kernel_path=dict(coarsen=coarsen_hits, refine=refine_hits))
+        kernel_path=dict(coarsen=coarsen_hits, refine=refine_hits),
+        level_stats=ovcycle.assemble(coarsen_meta, refine_meta))

@@ -10,6 +10,11 @@ per bucket batch), anything above --route-threshold takes the host-driven
 V-cycle — mesh-sharded when --mesh host (force a multi-device CPU run with
 XLA_FLAGS=--xla_force_host_platform_device_count=8). --mixed interleaves a
 few over-threshold graphs into the flood to exercise both lanes.
+
+--metrics-json PATH dumps the full telemetry document (metric registry
+snapshot + aggregated span tree — see docs/observability.md) on exit;
+--metrics-interval N additionally rewrites it every N seconds while the
+flood drains (a `PeriodicDumper` thread).
 """
 from __future__ import annotations
 
@@ -42,18 +47,34 @@ def main(argv=None):
     ap.add_argument("--no-race", action="store_true")
     ap.add_argument("--seed", type=int, default=7)
     ap.add_argument("--json", default=None)
+    ap.add_argument("--metrics-json", default=None,
+                    help="write the telemetry dump (registry snapshot + "
+                         "span aggregate) to this path on exit")
+    ap.add_argument("--metrics-interval", type=float, default=0.0,
+                    help="also rewrite --metrics-json every N seconds "
+                         "while running (0: only the final dump)")
+    ap.add_argument("--collect-stats", action="store_true",
+                    help="collect per-level LevelStats on the routed lane")
     args = ap.parse_args(argv)
 
+    from repro import obs
     from repro.core.generate import random_kuniform
     from repro.launch.partition import build_plan
     from repro.serve import PartitionService
 
     plan = build_plan(args.replicas) if args.mesh == "host" else None
+    # the CLI joins the process-global registry so one --metrics-json dump
+    # carries service + span + watchdog series together
     svc = PartitionService(
         theta=args.theta, batch_slots=args.batch_slots,
         bucket_base=args.bucket_base, route_threshold=args.route_threshold,
         plan=plan, race=not args.no_race, deadline_s=args.deadline,
-        max_restarts=args.max_restarts)
+        max_restarts=args.max_restarts, registry=obs.metrics.REGISTRY,
+        collect_stats=args.collect_stats)
+    dumper = None
+    if args.metrics_json and args.metrics_interval > 0:
+        dumper = obs.PeriodicDumper(args.metrics_json,
+                                    args.metrics_interval)
 
     reqs = []
     for i in range(args.requests):
@@ -71,6 +92,11 @@ def main(argv=None):
     res = svc.drain()
     wall = time.perf_counter() - t0
     svc.close()
+    if dumper is not None:
+        dumper.stop()          # writes the final dump
+    elif args.metrics_json:
+        from repro.obs.metrics import dump_json
+        dump_json(args.metrics_json)
 
     assert sorted(res) == sorted(rids), "lost rids"
     routes: dict[str, int] = {}
@@ -83,6 +109,9 @@ def main(argv=None):
         all_inbound_ok=all(r.audit["inbound_ok"] for r in res.values()),
         mean_connectivity=sum(r.connectivity for r in res.values())
         / len(res),
+        mean_queue_wait_s=sum(r.queue_wait_s for r in res.values())
+        / len(res),
+        mean_solve_s=sum(r.solve_s for r in res.values()) / len(res),
         stats=svc.stats,
         mesh=(dict(plan.mesh.shape) if plan is not None else None),
     )

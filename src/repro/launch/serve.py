@@ -2,6 +2,11 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
       --batch 4 --prompt-len 16 --max-new 16 --policy continuous --slots 4
+
+--metrics-json PATH dumps the engine telemetry (slot occupancy, admitted /
+evicted counters, tokens/sec, per-step latency histogram — see
+docs/observability.md) on exit; --metrics-interval N rewrites it every N
+seconds while generating.
 """
 from __future__ import annotations
 
@@ -11,6 +16,7 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config
 from repro.models import common
 from repro.models import transformer as T
@@ -32,6 +38,11 @@ def main(argv=None):
                     help="decode slots (0: one per batch row)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="paged-KV page size in tokens")
+    ap.add_argument("--metrics-json", default=None,
+                    help="write the telemetry dump to this path on exit")
+    ap.add_argument("--metrics-interval", type=float, default=0.0,
+                    help="also rewrite --metrics-json every N seconds "
+                         "while running (0: only the final dump)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -47,9 +58,20 @@ def main(argv=None):
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(2, cfg.vocab, size=(args.batch, args.prompt_len),
                            dtype=np.int32)
+    dumper = None
+    if args.metrics_json and args.metrics_interval > 0:
+        dumper = obs.PeriodicDumper(args.metrics_json,
+                                    args.metrics_interval)
     t0 = time.time()
-    out = eng.generate(prompts, max_new=args.max_new)
+    with obs.span("serve.generate", batch=args.batch,
+                  max_new=args.max_new) as sp:
+        out = eng.generate(prompts, max_new=args.max_new)
+        sp.sync(out)
     dt = time.time() - t0
+    if dumper is not None:
+        dumper.stop()          # writes the final dump
+    elif args.metrics_json:
+        obs.dump_json(args.metrics_json)
     n_tok = out.size
     print(f"generated {n_tok} tokens in {dt:.2f}s "
           f"({n_tok/dt:.1f} tok/s incl. prefill+compile)")

@@ -1,0 +1,29 @@
+"""Structured telemetry: metrics registry, span tracing, V-cycle stats.
+
+Three jit-safe, host-side layers (none ever touches a traced value, so
+telemetry on/off is bit-identical — see docs/observability.md):
+
+* `repro.obs.metrics` — labeled counters/gauges/histograms in a
+  thread-safe `Registry` (process-global default ``REGISTRY``), with
+  snapshot/reset, JSONL + Prometheus export, and the ``--metrics-json``
+  dump format (`dump_json` / `PeriodicDumper`).
+* `repro.obs.trace` — ``span(name, **attrs)`` wall-time span tree with
+  device-drain discipline (``sp.sync``), `jax.profiler.TraceAnnotation` /
+  `named_scope` alignment, and Perfetto/Chrome export under
+  ``REPRO_TRACE_DIR``.
+* `repro.obs.vcycle` — per-level `LevelStats` (structure, capacity
+  occupancy, kernel path, connectivity/balance/distinct-incidence slack)
+  assembled by the partitioner drivers onto `PartitionResult.level_stats`.
+"""
+from repro.obs import metrics, trace, vcycle  # noqa: F401
+from repro.obs.metrics import (  # noqa: F401
+    REGISTRY,
+    PeriodicDumper,
+    Registry,
+    counter,
+    dump_json,
+    gauge,
+    observe,
+)
+from repro.obs.trace import span  # noqa: F401
+from repro.obs.vcycle import LevelStats  # noqa: F401

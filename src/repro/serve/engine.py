@@ -31,6 +31,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import math
+import time
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +40,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import common
 from repro.models import transformer as T
+from repro.obs import metrics as obs_metrics
 from repro.serve import paging
 
 
@@ -65,10 +67,13 @@ class ServeEngine:
     policy: str = "continuous"  # "continuous" | "static"
     admit_lookahead: int = 4    # page-starved queue heads step() may skip
     record_keys: bool = False   # keep (tag, key) of every sample for tests
+    registry: obs_metrics.Registry | None = None  # None -> global REGISTRY
 
     def __post_init__(self):
         if self.policy not in ("continuous", "static"):
             raise ValueError(f"unknown policy {self.policy!r}")
+        if self.registry is None:
+            self.registry = obs_metrics.REGISTRY
         if self.plan is not None:
             # place params per the plan so callers can hand in host arrays;
             # the decode path then runs sharded (seq-sharded KV flash-decode
@@ -177,6 +182,7 @@ class ServeEngine:
         rid = self._next_rid
         self._next_rid += 1
         self._queue.append(_Request(rid, prompt, int(max_new), []))
+        self.registry.counter("engine.submitted")
         return rid
 
     def _commit(self, slot: int, req: _Request, tok: int,
@@ -189,11 +195,16 @@ class ServeEngine:
                                       reverse=True)
             self._results[req.rid] = np.asarray(req.tokens, np.int32)
             finished.append(req.rid)
+            self.registry.counter("engine.evicted")
+            self.registry.counter(
+                "engine.finished",
+                reason="eos" if tok == self.eos_id else "max_new")
 
     def step(self) -> list:
         """Admit queued requests into free slots (prefill + insert), then one
         decode step for every active slot. Returns rids finished this step."""
         self._ensure()
+        t0 = time.monotonic()
         finished: list = []
         # admission: prefill-insert into freed slots (MaxText idiom). A
         # page-starved head no longer blocks the whole queue: up to
@@ -237,7 +248,9 @@ class ServeEngine:
                 f"of {self.n_pages}")
         # decode: per-slot positions, paged KV scatter; freed slots' table
         # rows are sentinels, so their lanes are inert
+        emitted = admitted
         if self._active:
+            emitted += len(self._active)
             logits, self._cache = self._decode_paged(
                 self.params, jnp.asarray(self._slot_tok[:, None]),
                 jnp.asarray(self._slot_pos), self._cache,
@@ -248,6 +261,17 @@ class ServeEngine:
                 tok = int(toks[slot])
                 self._slot_tok[slot] = tok
                 self._commit(slot, req, tok, finished)
+        # step telemetry: _commit/_sample already synced to host above, so
+        # the wall-time here is the true step cost, not a dispatch tail
+        r = self.registry
+        dt = time.monotonic() - t0
+        if admitted:
+            r.counter("engine.admitted", admitted)
+        if emitted:
+            r.counter("engine.tokens", emitted)
+        r.observe("engine.step.s", dt)
+        r.gauge("engine.tokens_per_s", emitted / dt if dt > 0 else 0.0)
+        r.gauge("engine.slot_occupancy", len(self._active) / self.n_slots)
         return finished
 
     def drain(self) -> dict:

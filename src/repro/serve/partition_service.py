@@ -31,12 +31,20 @@ Scheduling policy (three lanes):
 Results are delivered as `ServiceResult` (compacted parts + the same
 host-side `metrics.audit` the offline driver reports), so a bucket-solved
 request is indistinguishable from a solo `partition()` call to the caller.
+
+Telemetry: every service records into a `repro.obs.metrics.Registry`
+(private per instance by default so concurrent services stay isolated; the
+CLI passes the process-global one so a single ``--metrics-json`` dump
+carries service + span + watchdog series). The metric catalogue lives in
+docs/observability.md; the legacy ``stats`` counter dict survives as a
+read-only property view over the registry.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import math
+import time
 
 import jax
 import jax.numpy as jnp
@@ -46,8 +54,11 @@ from repro.core import metrics
 from repro.core.hypergraph import (Caps, CapacityError, DeviceHypergraph,
                                    HostHypergraph, check_expansion_caps,
                                    host_pair_count, packed_host_arrays)
-from repro.core.partitioner import partition, partition_batch_device
+from repro.core.partitioner import (_batch_solver, partition,
+                                    partition_batch_device)
 from repro.dist.ft import StepWatchdog
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as otrace
 
 
 def stack_device_batch(hgs: list[HostHypergraph], caps: Caps
@@ -83,6 +94,9 @@ class ServiceResult:
     bucket: Bucket | None      # the solving bucket (bucket route only)
     restarts: int              # failed/stalled solves this request survived
     bumps: int                 # capacity bumps to a bigger bucket
+    queue_wait_s: float = 0.0  # total time queued, INCLUDING re-queue time
+                               # after a failed/stalled/bumped attempt
+    solve_s: float = 0.0       # total device-solve time across attempts
 
 
 @dataclasses.dataclass
@@ -96,6 +110,10 @@ class _Request:
     order: int                 # FIFO tie-break across lanes
     restarts: int = 0
     bumps: int = 0
+    submitted_at: float = 0.0  # time.monotonic() at submit()
+    enqueued_at: float = 0.0   # reset by every (re-)enqueue
+    queue_wait_s: float = 0.0  # accumulated across attempts
+    solve_s: float = 0.0       # accumulated across attempts
 
 
 class PartitionService:
@@ -122,6 +140,12 @@ class PartitionService:
     fault_hook : test-only injection point, called as ``hook(route, reqs)``
         immediately before each device solve; a raise is treated exactly
         like a solve failure.
+    registry : `repro.obs.metrics.Registry` to record service metrics into;
+        None (default) creates a private one so concurrent services do not
+        mix series. Pass `repro.obs.metrics.REGISTRY` to join the
+        process-global dump (the CLI does).
+    collect_stats : forward per-level quality `LevelStats` collection to the
+        routed `partition()` lane.
     """
 
     def __init__(self, theta: int = 16, n_cands: int = 4,
@@ -129,7 +153,9 @@ class PartitionService:
                  bucket_base: int = 64, route_threshold: int = 2048,
                  plan=None, shard_graph: bool = True, race: bool = True,
                  deadline_s: float = 300.0, max_restarts: int = 3,
-                 requeue_on_stall: bool = True, fault_hook=None):
+                 requeue_on_stall: bool = True, fault_hook=None,
+                 registry: obs_metrics.Registry | None = None,
+                 collect_stats: bool = False):
         if batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
         if bucket_base < 2:
@@ -147,6 +173,9 @@ class PartitionService:
         self.max_restarts = max_restarts
         self.requeue_on_stall = requeue_on_stall
         self.fault_hook = fault_hook
+        self.registry = registry if registry is not None \
+            else obs_metrics.Registry()
+        self.collect_stats = collect_stats
         # ladder indices 0..n_buckets-1; smallest bucket >= route_threshold
         # closes the ladder (a graph may need its caps even with few nodes)
         self.n_buckets = 1
@@ -160,8 +189,32 @@ class PartitionService:
         self._solve_no = 0
         self._wd: StepWatchdog | None = None
         self.stall_log: list[int] = []
-        self.stats = dict(batch_solves=0, routed_solves=0, restarts=0,
-                          stalls=0, bumps=0)
+        # pre-register the zero-valued counter series so a dump taken
+        # before the first event still carries the full catalogue
+        r = self.registry
+        for route in ("bucket", self._routed_route()):
+            r.counter("service.submitted", 0, route=route)
+            r.counter("service.solves", 0, route=route)
+            r.counter("service.requeues", 0, route=route)
+            r.counter("service.stalls", 0, route=route)
+        r.counter("service.bumps", 0)
+        r.gauge("service.pending", 0)
+
+    def _routed_route(self) -> str:
+        return "vcycle" if self.plan is None else "vcycle-sharded"
+
+    @property
+    def stats(self) -> dict:
+        """Legacy counter-dict view (read-only) over the registry — the
+        telemetry counters are the source of truth now."""
+        r = self.registry
+        return dict(
+            batch_solves=int(r.value("service.solves", route="bucket")),
+            routed_solves=int(r.value("service.solves",
+                                      route=self._routed_route())),
+            restarts=int(r.total("service.requeues")),
+            stalls=int(r.total("service.stalls")),
+            bumps=int(r.total("service.bumps")))
 
     # ------------------------------------------------------------- buckets
     def bucket(self, i: int) -> Bucket:
@@ -209,17 +262,26 @@ class PartitionService:
         bucket_i = None if routed else self._place(hg, caps_exact)
         req = _Request(rid=rid, hg=hg, omega=int(omega), delta=int(delta),
                        caps_exact=caps_exact, bucket_i=bucket_i,
-                       order=self._next_order)
+                       order=self._next_order,
+                       submitted_at=time.monotonic())
         self._next_order += 1
+        self.registry.counter(
+            "service.submitted",
+            route="bucket" if bucket_i is not None else self._routed_route())
         self._enqueue(req)
         return rid
 
     def _enqueue(self, req: _Request) -> None:
+        # every (re-)enqueue restarts the wait clock: a requeued request's
+        # queue_wait_s therefore includes its re-queue time (the first
+        # attempt's wait was folded in when that attempt started)
+        req.enqueued_at = time.monotonic()
         if req.bucket_i is None:
             self._routed.append(req)
         else:
             self._backlogs.setdefault(req.bucket_i, collections.deque()
                                       ).append(req)
+        self.registry.gauge("service.pending", self.pending)
 
     @property
     def pending(self) -> int:
@@ -237,9 +299,12 @@ class PartitionService:
             return []
         _, pick = min(lanes)
         if pick is None:
-            return self._solve_routed(self._routed.popleft())
+            req = self._routed.popleft()
+            self.registry.gauge("service.pending", self.pending)
+            return self._solve_routed(req)
         dq = self._backlogs[pick]
         reqs = [dq.popleft() for _ in range(min(self.batch_slots, len(dq)))]
+        self.registry.gauge("service.pending", self.pending)
         return self._solve_bucket(pick, reqs)
 
     def drain(self) -> dict[int, ServiceResult]:
@@ -259,16 +324,27 @@ class PartitionService:
     def _watchdog(self) -> StepWatchdog:
         if self._wd is None:
             self._wd = StepWatchdog(self.deadline_s,
-                                    self.stall_log.append)
+                                    self.stall_log.append,
+                                    registry=self.registry)
         return self._wd
 
     def _attempt(self, route: str, reqs: list[_Request], solve):
         """Shared supervision wrapper: fault hook, watchdog arm, requeue on
         failure/stall with the per-request restart budget. Returns the solve
-        output or None when the batch was requeued."""
+        output or None when the batch was requeued.
+
+        Queue-wait accounting happens here, at solve start: each request's
+        wait clock (restarted by `_enqueue`) is folded into its cumulative
+        `queue_wait_s`, so a requeued request's total includes its re-queue
+        time. Solve wall-time (failed attempts included) accumulates into
+        `solve_s` and the per-attempt latency histogram."""
         wd = self._watchdog()
         step_no = self._solve_no
         self._solve_no += 1
+        now = time.monotonic()
+        for r in reqs:
+            r.queue_wait_s += now - r.enqueued_at
+        t0 = time.monotonic()
         try:
             with wd.watch(step_no):
                 if self.fault_hook is not None:
@@ -276,18 +352,27 @@ class PartitionService:
                 out = solve()
                 jax.block_until_ready(out)
         except Exception as e:  # noqa: BLE001 — any solve failure restarts
-            self._requeue_or_raise(reqs, e)
+            self._account_solve(route, reqs, time.monotonic() - t0)
+            self._requeue_or_raise(route, reqs, e)
             return None
+        self._account_solve(route, reqs, time.monotonic() - t0)
         if step_no in wd.fired_steps:
-            self.stats["stalls"] += 1
+            self.registry.counter("service.stalls", route=route)
             if (self.requeue_on_stall
                     and all(r.restarts < self.max_restarts for r in reqs)):
                 # late result may come from a flaky device: discard + retry
-                self._requeue_or_raise(reqs)
+                self._requeue_or_raise(route, reqs)
                 return None
         return out
 
-    def _requeue_or_raise(self, reqs: list[_Request],
+    def _account_solve(self, route: str, reqs: list[_Request],
+                       elapsed: float) -> None:
+        for r in reqs:
+            r.solve_s += elapsed
+        self.registry.observe("service.solve_latency.s", elapsed,
+                              route=route)
+
+    def _requeue_or_raise(self, route: str, reqs: list[_Request],
                           exc: Exception | None = None) -> None:
         """Requeue every request with budget left, then re-raise if any
         exhausted its budget (requeue-first so a budget-spent lane does not
@@ -297,7 +382,7 @@ class PartitionService:
             if r.restarts >= self.max_restarts:
                 continue
             r.restarts += 1
-            self.stats["restarts"] += 1
+            self.registry.counter("service.requeues", route=route)
             self._enqueue(r)
         if exhausted:
             if exc is not None:
@@ -307,61 +392,92 @@ class PartitionService:
 
     def _solve_bucket(self, i: int, reqs: list[_Request]) -> list[int]:
         bucket = self.bucket(i)
-        lanes = reqs + [reqs[0]] * (self.batch_slots - len(reqs))
-        batch = stack_device_batch([r.hg for r in lanes], bucket.caps)
-        omega = np.asarray([r.omega for r in lanes], np.int32)
-        delta = np.asarray([r.delta for r in lanes], np.int32)
-        out = self._attempt("bucket", reqs, lambda: partition_batch_device(
-            batch, omega, delta, bucket.caps, bucket.kcap,
-            n_cands=self.n_cands, theta=self.theta,
-            max_levels=bucket.max_levels, chain_rounds=self.chain_rounds))
+        r = self.registry
+        # occupancy = live lanes / batch width; padding waste = fraction of
+        # the node-capacity volume the batch pads away (empty repeat lanes
+        # AND within-lane caps slack)
+        r.gauge("service.bucket_occupancy", len(reqs) / self.batch_slots,
+                bucket=i)
+        used = sum(q.hg.n_nodes for q in reqs)
+        r.gauge("service.padding_waste",
+                1.0 - used / (bucket.caps.n * self.batch_slots), bucket=i)
+        with otrace.span("service.stack", bucket=i) as sp:
+            lanes = reqs + [reqs[0]] * (self.batch_slots - len(reqs))
+            batch = sp.sync(
+                stack_device_batch([q.hg for q in lanes], bucket.caps))
+            omega = np.asarray([q.omega for q in lanes], np.int32)
+            delta = np.asarray([q.delta for q in lanes], np.int32)
+        misses0 = _batch_solver.cache_info().misses
+        with otrace.span("service.solve", route="bucket", bucket=i,
+                         lanes=len(reqs)):
+            out = self._attempt("bucket", reqs,
+                                lambda: partition_batch_device(
+                                    batch, omega, delta, bucket.caps,
+                                    bucket.kcap, n_cands=self.n_cands,
+                                    theta=self.theta,
+                                    max_levels=bucket.max_levels,
+                                    chain_rounds=self.chain_rounds))
+        missed = _batch_solver.cache_info().misses > misses0
+        r.counter("service.jit_cache", bucket=i,
+                  result="miss" if missed else "hit")
         if out is None:
             return []
-        self.stats["batch_solves"] += 1
-        host = {k: np.asarray(v) for k, v in out.items()}
+        r.counter("service.solves", route="bucket")
         finished = []
-        for lane, req in enumerate(reqs):
-            try:
-                # defense-in-depth recheck of the placement audit (the
-                # level-0 host audit + pair monotonicity already bound these)
-                check_expansion_caps(bucket.caps,
-                                     host["pairs_live_max"][lane],
-                                     host["nbr_entries_max"][lane])
-            except CapacityError:
-                req.bumps += 1
-                self.stats["bumps"] += 1
-                req.bucket_i = self._place(req.hg, req.caps_exact,
-                                           min_bucket=i + 1)
-                self._enqueue(req)
-                continue
-            parts = host["parts"][lane][: req.hg.n_nodes].astype(np.int64)
-            uniq, parts = np.unique(parts, return_inverse=True)
-            aud = metrics.audit(req.hg, parts, omega=req.omega,
-                                delta=req.delta)
-            self._results[req.rid] = ServiceResult(
-                rid=req.rid, parts=parts, n_parts=len(uniq),
-                n_levels=int(host["n_levels"][lane]),
-                connectivity=aud["connectivity"], cut_net=aud["cut_net"],
-                audit=aud, route="bucket", bucket=bucket,
-                restarts=req.restarts, bumps=req.bumps)
-            finished.append(req.rid)
+        with otrace.span("service.audit", bucket=i):
+            host = {k: np.asarray(v) for k, v in out.items()}
+            for lane, req in enumerate(reqs):
+                try:
+                    # defense-in-depth recheck of the placement audit (the
+                    # level-0 host audit + pair monotonicity already bound
+                    # these)
+                    check_expansion_caps(bucket.caps,
+                                         host["pairs_live_max"][lane],
+                                         host["nbr_entries_max"][lane])
+                except CapacityError:
+                    req.bumps += 1
+                    r.counter("service.bumps")
+                    req.bucket_i = self._place(req.hg, req.caps_exact,
+                                               min_bucket=i + 1)
+                    self._enqueue(req)
+                    continue
+                parts = host["parts"][lane][: req.hg.n_nodes] \
+                    .astype(np.int64)
+                uniq, parts = np.unique(parts, return_inverse=True)
+                aud = metrics.audit(req.hg, parts, omega=req.omega,
+                                    delta=req.delta)
+                r.observe("service.queue_wait.s", req.queue_wait_s,
+                          route="bucket")
+                self._results[req.rid] = ServiceResult(
+                    rid=req.rid, parts=parts, n_parts=len(uniq),
+                    n_levels=int(host["n_levels"][lane]),
+                    connectivity=aud["connectivity"], cut_net=aud["cut_net"],
+                    audit=aud, route="bucket", bucket=bucket,
+                    restarts=req.restarts, bumps=req.bumps,
+                    queue_wait_s=req.queue_wait_s, solve_s=req.solve_s)
+                finished.append(req.rid)
         return finished
 
     def _solve_routed(self, req: _Request) -> list[int]:
-        route = "vcycle" if self.plan is None else "vcycle-sharded"
+        route = self._routed_route()
         kwargs = dict(theta=self.theta, n_cands=self.n_cands,
-                      chain_rounds=self.chain_rounds)
+                      chain_rounds=self.chain_rounds,
+                      collect_stats=self.collect_stats)
         if self.plan is not None:
             kwargs.update(plan=self.plan, shard_graph=self.shard_graph,
                           race=self.race)
-        res = self._attempt(route, [req], lambda: partition(
-            req.hg, omega=req.omega, delta=req.delta, **kwargs))
+        with otrace.span("service.solve", route=route):
+            res = self._attempt(route, [req], lambda: partition(
+                req.hg, omega=req.omega, delta=req.delta, **kwargs))
         if res is None:
             return []
-        self.stats["routed_solves"] += 1
+        self.registry.counter("service.solves", route=route)
+        self.registry.observe("service.queue_wait.s", req.queue_wait_s,
+                              route=route)
         self._results[req.rid] = ServiceResult(
             rid=req.rid, parts=res.parts, n_parts=res.n_parts,
             n_levels=res.n_levels, connectivity=res.connectivity,
             cut_net=res.cut_net, audit=res.audit, route=route, bucket=None,
-            restarts=req.restarts, bumps=req.bumps)
+            restarts=req.restarts, bumps=req.bumps,
+            queue_wait_s=req.queue_wait_s, solve_s=req.solve_s)
         return [req.rid]

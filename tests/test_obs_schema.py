@@ -1,0 +1,151 @@
+"""Metrics-dump schema contract: the ``--metrics-json`` document shape is
+pinned by ``tests/data/metrics_schema.json`` (a JSON-Schema subset checked
+by the hand-rolled validator below — no jsonschema dependency).
+
+Two modes:
+
+* ``REPRO_METRICS_DUMP=<path>`` (the CI metrics-smoke step sets it after
+  running ``benchmarks.run --only partition_service --smoke
+  --metrics-json``): validates that file — either the per-lane
+  ``{"lanes": {...}}`` wrapper or a bare ``{ts, metrics, spans}`` document.
+* no env: generates a dump in-process (a tiny service flood into a private
+  registry) and validates that, so the contract is enforced even where the
+  benchmark has not run.
+
+The ``x-required-metrics`` section of the schema pins the series a
+`PartitionService` lane must carry; a rename in the service silently
+breaking dashboards fails here first.
+"""
+import json
+import os
+import pathlib
+
+import pytest
+
+SCHEMA_PATH = pathlib.Path(__file__).parent / "data" / "metrics_schema.json"
+
+_TYPES = {
+    "object": dict,
+    "array": list,
+    "string": str,
+    "boolean": bool,
+    "null": type(None),
+}
+
+
+def validate(instance, schema, path="$"):
+    """Minimal JSON-Schema-subset validator: type, required, properties,
+    additionalProperties, items, anyOf, enum. Raises AssertionError with
+    the failing path."""
+    if "anyOf" in schema:
+        errs = []
+        for sub in schema["anyOf"]:
+            try:
+                validate(instance, sub, path)
+                break
+            except AssertionError as e:
+                errs.append(str(e))
+        else:
+            raise AssertionError(f"{path}: no anyOf branch matched: {errs}")
+        return
+    if "enum" in schema:
+        assert instance in schema["enum"], \
+            f"{path}: {instance!r} not in enum {schema['enum']}"
+        return
+    t = schema.get("type")
+    if t == "number":
+        assert isinstance(instance, (int, float)) \
+            and not isinstance(instance, bool), f"{path}: not a number"
+    elif t == "integer":
+        assert isinstance(instance, int) and not isinstance(instance, bool), \
+            f"{path}: not an integer"
+    elif t is not None:
+        assert isinstance(instance, _TYPES[t]), f"{path}: not {t}"
+    if t == "object":
+        props = schema.get("properties", {})
+        for req in schema.get("required", []):
+            assert req in instance, f"{path}: missing required {req!r}"
+        addl = schema.get("additionalProperties", True)
+        for k, v in instance.items():
+            if k in props:
+                validate(v, props[k], f"{path}.{k}")
+            elif addl is False:
+                raise AssertionError(f"{path}: unexpected property {k!r}")
+            elif isinstance(addl, dict):
+                validate(v, addl, f"{path}.{k}")
+    elif t == "array" and "items" in schema:
+        for i, v in enumerate(instance):
+            validate(v, schema["items"], f"{path}[{i}]")
+
+
+def _schema():
+    return json.loads(SCHEMA_PATH.read_text())
+
+
+def _check_required(doc, schema):
+    req = schema["x-required-metrics"]
+    for kind in ("counters", "gauges", "histograms"):
+        missing = [n for n in req[kind] if n not in doc["metrics"][kind]]
+        assert not missing, f"dump missing required {kind}: {missing}"
+    span_names = {s["name"] for s in doc["spans"]}
+    missing = [n for n in req["spans"] if n not in span_names]
+    assert not missing, f"dump missing required spans: {missing}"
+
+
+def _generate_dump(tmp_path) -> dict:
+    from repro.core import generate
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as otrace
+    from repro.serve import PartitionService
+
+    reg = obs_metrics.Registry()
+    svc = PartitionService(theta=4, batch_slots=2, bucket_base=64,
+                           route_threshold=256, registry=reg)
+    for i in range(2):
+        svc.submit(generate.random_kuniform(40 + 4 * i, 60, 4, seed=i),
+                   omega=16, delta=256)
+    svc.drain()
+    svc.close()
+    path = tmp_path / "metrics.json"
+    obs_metrics.dump_json(str(path), reg)
+    del otrace  # spans section comes from the global trace via dump_json
+    return json.loads(path.read_text())
+
+
+# -------------------------------------------------------- validator itself
+def test_validator_rejects_bad_documents():
+    schema = _schema()
+    with pytest.raises(AssertionError, match="missing required"):
+        validate({"ts": 0.0, "metrics": {}}, schema)
+    bad = {"ts": 0.0, "spans": [],
+           "metrics": {"counters": {}, "gauges": {},
+                       "histograms": {"h": [{"labels": {}, "edges": ["oops"],
+                                             "counts": [], "sum": 0.0,
+                                             "count": 0}]}}}
+    with pytest.raises(AssertionError, match="anyOf"):
+        validate(bad, schema)
+    with pytest.raises(AssertionError, match="not a number"):
+        validate({"ts": "late", "metrics": {"counters": {}, "gauges": {},
+                                            "histograms": {}}, "spans": []},
+                 schema)
+
+
+# ------------------------------------------------------------ the contract
+def test_metrics_dump_matches_schema(tmp_path):
+    schema = _schema()
+    env = os.environ.get("REPRO_METRICS_DUMP")
+    if env:
+        doc = json.loads(pathlib.Path(env).read_text())
+        lanes = doc.get("lanes")
+        if lanes is not None:
+            assert lanes, "dump has an empty lanes table"
+            for name, lane_doc in lanes.items():
+                validate(lane_doc, schema, path=f"$.lanes.{name}")
+            if "partition_service" in lanes:
+                _check_required(lanes["partition_service"], schema)
+        else:
+            validate(doc, schema)
+    else:
+        doc = _generate_dump(tmp_path)
+        validate(doc, schema)
+        _check_required(doc, schema)

@@ -115,6 +115,16 @@ def test_service_fault_injected_solve_requeues_no_lost_rids():
     assert svc.stats["restarts"] == 3  # all three lanes of the killed batch
     assert all(res[r].restarts == 1 for r in rids)
     assert all(res[r].audit["size_ok"] for r in rids)
+    # queue-wait accounting: a requeued request's wait clock restarts on
+    # re-enqueue, so its total includes the re-queue time of the killed
+    # attempt; solve_s accumulates across both attempts
+    assert all(res[r].queue_wait_s > 0 for r in rids)
+    assert all(res[r].solve_s > 0 for r in rids)
+    # the registry histograms saw one observation per finished request
+    hists = svc.registry.snapshot()["histograms"]
+    (qw,) = hists["service.queue_wait.s"]
+    assert qw["labels"] == {"route": "bucket"} and qw["count"] == 3
+    assert svc.registry.total("service.submitted") == 3
 
 
 def test_service_restart_budget_exhausted_raises():
@@ -148,6 +158,12 @@ def test_service_watchdog_stall_requeues():
     assert svc.stall_log  # on_stall callback observed the stuck solve no.
     assert rid in res and res[rid].restarts >= 1
     assert res[rid].audit["size_ok"]
+    # solve_s spans every attempt, so the stalled first solve's 0.25 s
+    # sleep must be included; queue_wait_s includes the re-queue wait
+    assert res[rid].solve_s >= 0.25
+    assert res[rid].queue_wait_s > 0
+    # the stall also landed in the watchdog's registry counter
+    assert svc.registry.total("watchdog.stalls") >= 1
 
 
 def test_service_bucket_bump_and_routing():
