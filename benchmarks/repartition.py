@@ -1,0 +1,111 @@
+"""Streaming repartitioning: cold V-cycle vs warm refine-only re-solve.
+
+One medium SNN graph takes a stream of small `GraphDelta` batches (edge
+churn, `generate.perturb_delta`). Lanes:
+
+* cold — steady-state `partition()` wall time on the graph (compile
+  excluded by a warmup solve): the price of ignoring the previous solution;
+* warm — `repartition()` per delta window with a persistent `WarmCache`
+  (device storage + caps reused, jit cache stays hot). Each window is
+  asserted to take the refine-only path: ``mode == "warm"``,
+  ``n_levels == 0``, NO ``coarsen_level`` span in the trace tree, and the
+  same Omega/Delta + distinct-incident-hyperedge audit as the cold solve —
+  the acceptance contract of the streaming-repartitioning PR. The derived
+  column reports the warm:cold speedup (steady-state windows, best-of);
+* drift ramp — growing delta batches against the default drift threshold,
+  reporting which mode (`warm` / `fallback-drift`) each drift level takes;
+  the ramp must end in the fallback branch.
+
+Smoke mode (REPRO_BENCH_SMOKE=1) shrinks the graph and window count.
+
+  PYTHONPATH=src python -m benchmarks.run --only repartition [--smoke]
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import row
+
+OMEGA, DELTA = 16, 64
+THETA = 4
+N_WINDOWS = 4
+DELTA_EDGES = 4
+
+
+def _smoke() -> bool:
+    return bool(os.environ.get("REPRO_BENCH_SMOKE"))
+
+
+def _mkgraph():
+    from repro.core import generate
+    width = 16 if _smoke() else 40
+    return generate.snn_layered(n_layers=4 if _smoke() else 5, width=width,
+                                fanout=6, seed=3)
+
+
+def run():
+    from repro.core import generate
+    from repro.core.partitioner import WarmCache, partition, repartition
+    from repro.obs import trace as otrace
+
+    windows = 2 if _smoke() else N_WINDOWS
+    hg = _mkgraph()
+
+    # ---- cold lane: steady-state full V-cycle (compile excluded) ---------
+    partition(hg, omega=OMEGA, delta=DELTA, theta=THETA)  # warmup/compile
+    t0 = time.perf_counter()
+    cold = partition(hg, omega=OMEGA, delta=DELTA, theta=THETA)
+    t_cold = time.perf_counter() - t0
+    assert cold.audit["size_ok"] and cold.audit["inbound_ok"]
+    yield row("repartition/cold_vcycle", t_cold * 1e6,
+              f"levels={cold.n_levels}")
+
+    # ---- warm lane: delta windows through the persistent cache -----------
+    cache = WarmCache()
+    warm0 = repartition(hg, cold.parts, OMEGA, DELTA, theta=THETA,
+                        cache=cache)  # zero-delta warmup: compiles refine
+    assert warm0.mode == "warm"
+    parts = warm0.parts
+    times = []
+    for w in range(windows):
+        dl = generate.perturb_delta(hg, n_edges=DELTA_EDGES, seed=100 + w)
+        otrace.reset()
+        t0 = time.perf_counter()
+        res = repartition(hg, parts, OMEGA, DELTA, theta=THETA, deltas=dl,
+                          drift_threshold=0.9, cache=cache)
+        dt = time.perf_counter() - t0
+        # the acceptance contract: refine-only, no coarsening, same audit
+        assert res.mode == "warm", res.mode
+        assert res.n_levels == 0
+        root = otrace.last_root()
+        assert root is not None and not root.find("coarsen_level")
+        assert res.audit["size_ok"] and res.audit["inbound_ok"]
+        parts = res.parts
+        times.append(dt)
+    t_warm = min(times)  # best steady-state window (no cache rebuild)
+    assert t_warm < t_cold, (
+        f"warm repartition ({t_warm:.3f}s) must beat the cold V-cycle "
+        f"({t_cold:.3f}s)")
+    yield row("repartition/warm_refine_only", t_warm * 1e6,
+              f"speedup={t_cold / t_warm:.2f}x windows={windows}")
+
+    # ---- drift ramp: growing churn against the default threshold ---------
+    hg2 = _mkgraph()
+    base = partition(hg2, omega=OMEGA, delta=DELTA, theta=THETA)
+    parts2 = base.parts
+    ramp = [2, 8] if _smoke() else [2, 8, 24, 48]
+    modes = []
+    for i, n_edges in enumerate(ramp):
+        n_edges = min(n_edges, hg2.n_edges - 1)
+        dl = generate.perturb_delta(hg2, n_edges=n_edges, seed=200 + i)
+        t0 = time.perf_counter()
+        res = repartition(hg2, parts2, OMEGA, DELTA, theta=THETA,
+                          deltas=dl)  # default drift_threshold
+        dt = time.perf_counter() - t0
+        modes.append(res.mode)
+        parts2 = res.parts
+        yield row(f"repartition/drift_ramp_{n_edges}edges", dt * 1e6,
+                  f"mode={res.mode} drift_after={hg2.drift:.3f}")
+    assert modes[-1].startswith("fallback"), (
+        f"the ramp must end in the cold fallback, got {modes}")

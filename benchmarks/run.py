@@ -25,7 +25,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig7,fig8,fig15,fig16,tab2,roofline,"
                          "proofline,dist,dist_sort,serve_engine,"
-                         "partition_service")
+                         "partition_service,repartition")
     ap.add_argument("--smoke", action="store_true",
                     help="shrink lanes that honor REPRO_BENCH_SMOKE "
                          "(CI metrics-smoke mode)")
@@ -38,7 +38,8 @@ def main(argv=None) -> None:
     from benchmarks import (dist_scaling, dist_sort, fig7_snn_comparison,
                             fig8_breakdown, fig15_kway, fig16_ablations,
                             partition_service, partitioner_roofline,
-                            roofline, serve_engine, tab2_work_span)
+                            repartition, roofline, serve_engine,
+                            tab2_work_span)
     mods = {
         "fig7": fig7_snn_comparison,
         "fig8": fig8_breakdown,
@@ -51,6 +52,7 @@ def main(argv=None) -> None:
         "dist_sort": dist_sort,
         "serve_engine": serve_engine,
         "partition_service": partition_service,
+        "repartition": repartition,
     }
     want = args.only.split(",") if args.only else list(mods)
     lanes: dict = {}

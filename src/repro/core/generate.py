@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.hypergraph import HostHypergraph
+from repro.core.hypergraph import GraphDelta, HostHypergraph
 
 
 def _finalize(n_nodes, pin_lists, nsrc, weights) -> HostHypergraph:
@@ -116,6 +116,29 @@ def random_kuniform(n_nodes: int, n_edges: int, k: int, seed: int = 0,
         nsrc.append(n_src)
         weights.append(float(rng.integers(1, 10)) if weighted else 1.0)
     return _finalize(n_nodes, pin_lists, nsrc, weights)
+
+
+def perturb_delta(hg: HostHypergraph, n_edges: int = 8,
+                  seed: int = 0) -> GraphDelta:
+    """A structure-preserving random perturbation: delete ``n_edges``
+    random edges and insert the same number of fresh similar-shaped ones
+    (driver + sampled sinks, cardinality drawn from the existing edge
+    cardinality distribution). Deterministic in ``seed``. This is the
+    synthetic load shift used by the streaming-repartition benchmark, the
+    launch CLI's ``--perturb-edges``, and the warm-path tests."""
+    rng = np.random.default_rng(seed)
+    n_edges = int(min(n_edges, hg.n_edges))
+    if n_edges <= 0:
+        return GraphDelta()
+    dels = rng.choice(hg.n_edges, size=n_edges, replace=False)
+    card = np.maximum(np.diff(hg.edge_off), 2).astype(np.int64)
+    adds = []
+    for e in dels:
+        k = int(min(card[int(e)], hg.n_nodes))
+        pins = rng.choice(hg.n_nodes, size=k, replace=False).astype(np.int32)
+        adds.append((pins, 1 if k > 1 else 0, float(hg.edge_w[int(e)])))
+    return GraphDelta(del_edges=tuple(int(e) for e in dels),
+                      add_edges=tuple(adds))
 
 
 # Named suites mirroring the paper's tables at CPU-tractable scale.

@@ -65,13 +65,20 @@ def check_expansion_caps(caps: "Caps", n_pairs_live, n_nbr_entries=None):
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
 class HostHypergraph:
-    """Ragged numpy hypergraph; ground-truth structure for IO / oracles."""
+    """Ragged numpy hypergraph; ground-truth structure for IO / oracles.
+
+    ``drift_pins`` accumulates the number of pins touched by ``apply_delta``
+    batches since the last full (cold) solve — the numerator of the
+    ``drift`` metric that ``core.partitioner.repartition`` compares against
+    its fallback threshold. A cold solve calls ``reset_drift()``.
+    """
 
     n_nodes: int
     edge_off: np.ndarray    # [E+1] int64
     edge_pins: np.ndarray   # [P]   int32 — sources first within each edge
     edge_nsrc: np.ndarray   # [E]   int32
     edge_w: np.ndarray      # [E]   float32
+    drift_pins: int = 0     # pins touched by deltas since last full solve
 
     def __post_init__(self):
         self.edge_off = np.asarray(self.edge_off, np.int64)
@@ -86,6 +93,16 @@ class HostHypergraph:
     @property
     def n_pins(self) -> int:
         return int(self.edge_off[-1])
+
+    @property
+    def drift(self) -> float:
+        """Fraction of the current pin population touched by deltas since
+        the last full solve, clamped to 1.0. The streaming repartitioner
+        falls back to a cold V-cycle once this crosses its threshold."""
+        return min(1.0, self.drift_pins / max(self.n_pins, 1))
+
+    def reset_drift(self) -> None:
+        self.drift_pins = 0
 
     def edge(self, e: int) -> np.ndarray:
         return self.edge_pins[self.edge_off[e]: self.edge_off[e + 1]]
@@ -132,6 +149,152 @@ class HostHypergraph:
             max_deg=int(deg.max(initial=0)), avg_deg=float(deg.mean()) if len(deg) else 0.0,
             pair_expansion=int((card.astype(np.int64) ** 2 - card).sum()),
         )
+
+
+# --------------------------------------------------------------------------
+# Incremental updates (streaming repartitioning)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class GraphDelta:
+    """One batched structural update against a ``HostHypergraph``.
+
+    **Id semantics.** Every node/edge id in a delta refers to the graph
+    *before* the batch is applied. New node ids are knowable upfront
+    (``old_n .. old_n + add_nodes - 1``) and may appear in ``add_pins`` /
+    ``add_edges`` of the same batch. Edge ids shift down after deletions
+    (edge order is otherwise preserved, then ``add_edges`` append), so a
+    *subsequent* delta must use post-batch ids.
+
+    **Node deletion is a tombstone**: every pin of the node is dropped from
+    every edge, but the id stays allocated as an isolated node — node ids
+    are stable, so a previous partition vector remains aligned (the warm
+    path's core invariant).
+
+    Fields:
+      * ``add_nodes`` — number of fresh (isolated) nodes to append.
+      * ``del_nodes`` — node ids to tombstone.
+      * ``del_edges`` — edge ids to remove outright.
+      * ``add_edges`` — ``(pins, nsrc, w)`` triples; pins sources-first.
+      * ``add_pins`` — ``(edge, node)`` pairs appended as *dst* pins.
+      * ``del_pins`` — ``(edge, node)`` pairs removed (nsrc adjusts if the
+        removed pin was a source).
+    """
+
+    add_nodes: int = 0
+    del_nodes: tuple = ()
+    del_edges: tuple = ()
+    add_edges: tuple = ()   # of (pins: array-like, nsrc: int, w: float)
+    add_pins: tuple = ()    # of (edge, node)
+    del_pins: tuple = ()    # of (edge, node)
+
+
+def apply_delta(hg: HostHypergraph, delta: GraphDelta) -> int:
+    """Apply one delta batch to ``hg`` **in place**; returns the number of
+    pins touched (also accumulated onto ``hg.drift_pins``).
+
+    Application order: pin deletions -> node tombstones -> pin insertions ->
+    edge deletions -> edge insertions -> node-space growth. Touched pins =
+    every explicitly edited pin + every pin of a deleted or inserted edge +
+    every pin dropped by a tombstone. Raises ``ValueError`` on ids that do
+    not resolve against the pre-batch graph (a malformed delta must never
+    half-apply silently — callers treat the graph as corrupt if this
+    escapes mid-batch, exactly like a failed transaction)."""
+    new_n = hg.n_nodes + int(delta.add_nodes)
+    pins = [list(map(int, hg.edge(e))) for e in range(hg.n_edges)]
+    nsrc = [int(v) for v in hg.edge_nsrc]
+    wts = [float(v) for v in hg.edge_w]
+    E = len(pins)
+    touched = 0
+
+    for e, v in delta.del_pins:
+        e, v = int(e), int(v)
+        if not 0 <= e < E:
+            raise ValueError(f"del_pins: edge {e} out of range")
+        try:
+            i = pins[e].index(v)
+        except ValueError:
+            raise ValueError(f"del_pins: node {v} is not a pin of edge {e}")
+        del pins[e][i]
+        if i < nsrc[e]:
+            nsrc[e] -= 1
+        touched += 1
+
+    dead_nodes = {int(v) for v in delta.del_nodes}
+    if dead_nodes:
+        for v in dead_nodes:
+            if not 0 <= v < hg.n_nodes:
+                raise ValueError(f"del_nodes: node {v} out of range")
+        for e in range(E):
+            lst = pins[e]
+            hit = [i for i, v in enumerate(lst) if v in dead_nodes]
+            if hit:
+                nsrc[e] -= sum(1 for i in hit if i < nsrc[e])
+                pins[e] = [v for i, v in enumerate(lst) if v not in dead_nodes]
+                touched += len(hit)
+
+    for e, v in delta.add_pins:
+        e, v = int(e), int(v)
+        if not 0 <= e < E:
+            raise ValueError(f"add_pins: edge {e} out of range")
+        if not 0 <= v < new_n:
+            raise ValueError(f"add_pins: node {v} out of range")
+        if v in pins[e]:
+            raise ValueError(f"add_pins: node {v} already a pin of edge {e}")
+        pins[e].append(v)
+        touched += 1
+
+    dead_edges = {int(e) for e in delta.del_edges}
+    for e in dead_edges:
+        if not 0 <= e < E:
+            raise ValueError(f"del_edges: edge {e} out of range")
+        touched += len(pins[e])
+    keep = [e for e in range(E) if e not in dead_edges]
+    pins = [pins[e] for e in keep]
+    nsrc = [nsrc[e] for e in keep]
+    wts = [wts[e] for e in keep]
+
+    for epins, ensrc, ew in delta.add_edges:
+        epins = [int(v) for v in np.asarray(epins).ravel()]
+        if len(set(epins)) != len(epins):
+            raise ValueError("add_edges: duplicate pin within an edge")
+        for v in epins:
+            if not 0 <= v < new_n:
+                raise ValueError(f"add_edges: node {v} out of range")
+        if not 0 <= int(ensrc) <= len(epins):
+            raise ValueError("add_edges: nsrc out of range")
+        pins.append(epins)
+        nsrc.append(int(ensrc))
+        wts.append(float(ew))
+        touched += len(epins)
+
+    lens = np.array([len(p) for p in pins], np.int64)
+    hg.n_nodes = new_n
+    hg.edge_off = np.concatenate([[0], np.cumsum(lens)]).astype(np.int64)
+    hg.edge_pins = (np.concatenate([np.asarray(p, np.int32) for p in pins])
+                    if pins and sum(lens) else np.zeros(0, np.int32))
+    hg.edge_nsrc = np.asarray(nsrc, np.int32)
+    hg.edge_w = np.asarray(wts, np.float32)
+    hg.drift_pins += touched
+    return touched
+
+
+def check_fits_caps(hg: HostHypergraph, caps: "Caps") -> None:
+    """Resize trigger for delta-updated graphs: raises ``CapacityError``
+    when ``hg`` no longer fits a previously computed ``Caps`` — live counts
+    against the node/edge/pin capacities, plus the PR 5 pair-expansion audit
+    (``check_expansion_caps``), since inserted edges can grow the pair total
+    past ``caps.pairs``. The kernel tile bounds (``d_max``/``h0``) are *not*
+    checked here: the Pallas dispatches guard them with their own runtime
+    ``fits_kernel`` predicates and fall back to the segment paths, so stale
+    tile bounds degrade speed, never correctness."""
+    if hg.n_nodes > caps.n or hg.n_edges > caps.e or hg.n_pins > caps.p:
+        raise CapacityError(
+            f"delta-updated graph outgrew its capacities: "
+            f"nodes {hg.n_nodes}/{caps.n}, edges {hg.n_edges}/{caps.e}, "
+            f"pins {hg.n_pins}/{caps.p}. Rebuild device storage at fresh "
+            f"Caps (Caps.for_host) — the warm solver does this "
+            f"automatically.")
+    check_expansion_caps(caps, host_pair_count(hg))
 
 
 # --------------------------------------------------------------------------

@@ -27,7 +27,7 @@ from repro.core.hypergraph import (Caps, HostHypergraph,
                                    host_pair_count)
 from repro.core.partitioner import (PartitionResult, _next_pow2,
                                     make_coarsen_fns, make_refine_fn,
-                                    run_coarsen_loop)
+                                    run_coarsen_loop, run_refine_loop)
 from repro.core.refine import RefineParams
 from repro.obs import trace as otrace
 from repro.obs import vcycle as ovcycle
@@ -146,41 +146,14 @@ def partition_kway(hg: HostHypergraph, k: int, eps: float = 0.03,
         _refine = make_refine_fn(k, kcap, rparams, rlog, plan, race,
                                  race_seed)
 
-        refine_meta: dict = {len(levels): dict(structure=dict(
+        # shared uncoarsening-refinement loop (one batched telemetry
+        # readback; kway's collect_log never logged refine entries -> None)
+        parts, sp_refine, refine_meta, refine_hits, pins_hits = \
+            run_refine_loop(d, parts, caps, levels, gammas, _refine, kcap,
+                            omega, BIG_DELTA, collect_stats, None)
+        refine_meta[len(levels)]["structure"] = dict(
             nodes=coarse_host.n_nodes, edges=int(d.n_edges),
-            pins=int(d.n_pins)))}
-        quality_dev: dict = {}
-        refine_hits_dev: dict = {}
-        with otrace.span("refine") as sp_refine:
-            with otrace.span("refine_level", level=len(levels)):
-                parts, refine_hits_dev[len(levels)] = _refine(
-                    d, parts, caps, len(levels))
-            if collect_stats:
-                quality_dev[len(levels)] = ovcycle.quality_scalars(
-                    d, parts, caps, kcap, omega, BIG_DELTA)
-            for lvl in range(len(levels) - 1, -1, -1):
-                g = gammas[lvl]
-                d_lvl, caps_lvl = levels[lvl]
-                with otrace.span("refine_level", level=lvl):
-                    parts = jnp.where(
-                        jnp.arange(caps_lvl.n) < d_lvl.n_nodes,
-                        parts[jnp.clip(g, 0, caps_lvl.n - 1)], 0)
-                    parts, refine_hits_dev[lvl] = _refine(d_lvl, parts,
-                                                          caps_lvl, lvl)
-                if collect_stats:
-                    quality_dev[lvl] = ovcycle.quality_scalars(
-                        d_lvl, parts, caps_lvl, kcap, omega, BIG_DELTA)
-            # block before the span closes (the tail would otherwise drain
-            # in np.asarray below, after the timer stopped)
-            jax.block_until_ready(parts)
-        hits_h, quality_h = jax.device_get(
-            ([refine_hits_dev[i] for i in range(len(levels) + 1)],
-             quality_dev))
-        refine_hits = [int(v) for v in hits_h]
-        for lvl in range(len(levels) + 1):
-            refine_meta.setdefault(lvl, {})
-            refine_meta[lvl]["kernel_refine"] = refine_hits[lvl]
-            refine_meta[lvl]["quality"] = quality_h.get(lvl)
+            pins=int(d.n_pins))
 
         with otrace.span("audit"):
             parts_np = np.asarray(parts)[: hg.n_nodes].astype(np.int64)
@@ -193,5 +166,82 @@ def partition_kway(hg: HostHypergraph, k: int, eps: float = 0.03,
         timings=dict(total=sp_total.duration, coarsen=sp_coarsen.duration,
                      refine=sp_refine.duration),
         level_log=(log or []) + (rlog or []),
-        kernel_path=dict(coarsen=coarsen_hits, refine=refine_hits),
+        kernel_path=dict(coarsen=coarsen_hits, refine=refine_hits,
+                         pins=pins_hits),
         level_stats=ovcycle.assemble(coarsen_meta, refine_meta))
+
+
+def repartition_kway(hg: HostHypergraph, prev_parts, k: int,
+                     eps: float = 0.03, *, deltas=None,
+                     drift_threshold: float = 0.25, cache=None,
+                     n_cands: int = 4, theta: int = 16,
+                     coarse_target: int | None = None,
+                     use_kernels: bool = False,
+                     collect_log: bool = False, max_levels: int = 64,
+                     plan=None, race: bool = True, race_seed: int = 0,
+                     dist_coarsen: bool = True,
+                     compensated_psum: bool = False,
+                     shard_graph: bool = False,
+                     collect_stats: bool = False) -> PartitionResult:
+    """k-way sibling of `partitioner.repartition`: apply ``deltas`` to
+    ``hg`` in place, then re-refine from ``prev_parts`` with the k-way
+    constraint frame (Omega recomputed from the post-delta node count,
+    Delta = +inf), falling back to a cold `partition_kway` when drift
+    exceeds the threshold or the warm result breaks balance. ``n_parts=k``
+    is pinned so trailing empty partitions keep their ids."""
+    from repro.core.hypergraph import (CapacityError, GraphDelta,
+                                       apply_delta, check_fits_caps)
+    from repro.core.partitioner import WarmCache, _extend_parts, refine_from
+
+    if isinstance(deltas, GraphDelta):
+        deltas = [deltas]
+    for dl in (deltas or []):
+        apply_delta(hg, dl)
+        if cache is not None and cache.caps is not None:
+            cache.d = None
+            try:
+                check_fits_caps(hg, cache.caps)
+            except CapacityError:
+                cache.invalidate()
+
+    omega = max(int((1 + eps) * hg.n_nodes / k), math.ceil(hg.n_nodes / k))
+    parts0 = _extend_parts(prev_parts, hg.n_nodes, k)
+
+    def _cold(mode: str) -> PartitionResult:
+        res = partition_kway(
+            hg, k, eps, n_cands=n_cands, theta=theta,
+            coarse_target=coarse_target, use_kernels=use_kernels,
+            collect_log=collect_log, max_levels=max_levels, plan=plan,
+            race=race, race_seed=race_seed, dist_coarsen=dist_coarsen,
+            compensated_psum=compensated_psum, shard_graph=shard_graph,
+            collect_stats=collect_stats)
+        res.mode = mode
+        hg.reset_drift()
+        if cache is not None:
+            cache.invalidate()
+        return res
+
+    if hg.drift > drift_threshold:
+        return _cold("fallback-drift")
+
+    wc = cache if cache is not None else WarmCache()
+    if wc.caps is None:
+        wc.d = None
+        wc.caps = Caps.for_host(hg)
+        check_expansion_caps(wc.caps, host_pair_count(hg))
+    if wc.d is None:
+        if shard_graph and plan is not None:
+            from repro.dist.graph import sharded_from_host
+            wc.d = sharded_from_host(hg, wc.caps, plan)
+        else:
+            wc.d = device_from_host(hg, wc.caps)
+    res = refine_from(
+        hg, parts0, omega, BIG_DELTA, n_parts=k, theta=theta,
+        use_kernels=use_kernels, collect_log=collect_log, plan=plan,
+        race=race, race_seed=race_seed, shard_graph=shard_graph,
+        collect_stats=collect_stats, device_graph=wc.d, caps=wc.caps,
+        mode="warm")
+    res.audit["balance_eps"] = metrics.balance_epsilon(res.parts, k)
+    if not res.audit["size_ok"]:
+        return _cold("fallback-audit")
+    return res

@@ -24,9 +24,11 @@ import numpy as np
 from repro.core import metrics
 from repro.core.contract import contract
 from repro.core.coarsen import CoarsenParams, coarsen_step
-from repro.core.hypergraph import (Caps, HostHypergraph,
-                                   check_expansion_caps, device_from_host,
-                                   device_pair_count, host_pair_count)
+from repro.core.hypergraph import (Caps, GraphDelta, HostHypergraph,
+                                   CapacityError, apply_delta,
+                                   check_expansion_caps, check_fits_caps,
+                                   device_from_host, device_pair_count,
+                                   host_pair_count)
 from repro.core.refine import RefineParams, refine_level
 from repro.obs import trace as otrace
 from repro.obs import vcycle as ovcycle
@@ -46,12 +48,17 @@ class PartitionResult:
     level_log: list
     # per-level Pallas dispatch coverage (empty when use_kernels=False):
     #   "coarsen": [0/1 per coarsening level, finest first]
-    #   "refine":  [kernel reps (0..theta) per refined level, finest first;
-    #               the last entry is the coarsest level]
+    #   "refine":  [gains-kernel reps (0..theta) per refined level, finest
+    #               first; the last entry is the coarsest level]
+    #   "pins":    [pins-count-kernel reps per refined level, same layout]
     kernel_path: dict = dataclasses.field(default_factory=dict)
     # per-level telemetry (repro.obs.vcycle.LevelStats, finest first;
     # quality fields populated under collect_stats=True)
     level_stats: list = dataclasses.field(default_factory=list)
+    # how this result was produced: "cold" (full V-cycle), "warm"
+    # (refine-only from a previous partition), or "fallback-drift" /
+    # "fallback-audit" (repartition() fell back to a full V-cycle)
+    mode: str = "cold"
 
 
 def _next_pow2(x: int) -> int:
@@ -102,9 +109,9 @@ def make_refine_fn(k, kcap: int, rparams: RefineParams, rlog,
     `kway.partition_kway`: plain `refine_level` without a plan, the
     mesh-raced/sharded `dist.partition.refine_level` with one (seed offset
     by level so replica tie-break permutations decorrelate across levels).
-    Returns `fn(d, parts, caps, level) -> (parts, kernel_hits)` — the
-    trailing device scalar counts the level's repetitions whose gains
-    dispatch took the Pallas branch."""
+    Returns `fn(d, parts, caps, level) -> (parts, (kernel_hits,
+    pins_hits))` — the trailing device scalars count the level's
+    repetitions whose gains / pins dispatch took the Pallas branch."""
     if plan is None:
         def _refine(d_, parts_, caps_, lvl_):
             return refine_level(d_, parts_, k, caps_, kcap, rparams, rlog)
@@ -165,6 +172,62 @@ def run_coarsen_loop(d, caps: Caps, target: int, max_levels: int,
                 d, caps = shrink_device(d, caps)
     jax.block_until_ready((d, gammas))
     return d, caps, levels, gammas, coarsen_hits, coarsen_meta
+
+
+def run_refine_loop(d, parts, caps: Caps, levels, gammas, _refine,
+                    kcap: int, omega: int, delta: int,
+                    collect_stats: bool, log: list | None):
+    """Host-driven uncoarsening refinement loop shared by `partition`,
+    `kway.partition_kway`, and the warm-start entry `refine_from`: refine
+    the coarsest (or only) level, then project through each ``gammas[lvl]``
+    and refine every retained level, finest last. Runs under a "refine"
+    span with one "refine_level" span per level; kernel-dispatch hits and
+    quality scalars stay device values until ONE batched readback at the
+    end, so telemetry adds no per-level syncs. Blocks the dispatch tail
+    before the span closes.
+
+    Returns ``(parts, refine_span, refine_meta, refine_hits, pins_hits)``
+    — ``refine_meta`` one dict per refined level (``kernel_refine`` /
+    ``quality`` keys, for `obs.vcycle.assemble`), the hits lists the
+    per-level Pallas-branch repetition counts (gains / pins dispatch) for
+    ``PartitionResult.kernel_path``. With ``levels=[]`` (warm start) this
+    is a single-level refine of ``d`` — no projection, no coarsening."""
+    quality_dev: dict = {}
+    hits_dev: dict = {}
+    with otrace.span("refine") as sp_refine:
+        with otrace.span("refine_level", level=len(levels)):
+            parts, hits_dev[len(levels)] = _refine(d, parts, caps,
+                                                   len(levels))
+        if collect_stats:
+            quality_dev[len(levels)] = ovcycle.quality_scalars(
+                d, parts, caps, kcap, omega, delta)
+        for lvl in range(len(levels) - 1, -1, -1):
+            g = gammas[lvl]
+            d_lvl, caps_lvl = levels[lvl]
+            coarse_cap = parts.shape[0]
+            with otrace.span("refine_level", level=lvl):
+                parts = jnp.where(
+                    jnp.arange(caps_lvl.n) < d_lvl.n_nodes,
+                    parts[jnp.clip(g[: caps_lvl.n], 0, coarse_cap - 1)], 0)
+                parts, hits_dev[lvl] = _refine(d_lvl, parts, caps_lvl, lvl)
+            if collect_stats:
+                quality_dev[lvl] = ovcycle.quality_scalars(
+                    d_lvl, parts, caps_lvl, kcap, omega, delta)
+            if log is not None:
+                log.append(dict(kind="refine", level=lvl))
+        # block before the span closes: the refine tail would otherwise
+        # drain inside the caller's np.asarray(parts), after the timer
+        # stopped
+        jax.block_until_ready(parts)
+    # ONE batched readback for the kernel hits + quality scalars
+    hits_h, quality_h = jax.device_get(
+        ([hits_dev[i] for i in range(len(levels) + 1)], quality_dev))
+    refine_hits = [int(kt) for kt, _ in hits_h]
+    pins_hits = [int(pt) for _, pt in hits_h]
+    refine_meta = {
+        lvl: dict(kernel_refine=refine_hits[lvl], quality=quality_h.get(lvl))
+        for lvl in range(len(levels) + 1)}
+    return parts, sp_refine, refine_meta, refine_hits, pins_hits
 
 
 def vcycle_device(d, omega, delta, caps: Caps, kcap: int,
@@ -239,8 +302,8 @@ def vcycle_device(d, omega, delta, caps: Caps, kcap: int,
 
     def refine_one_level(d_lvl, parts):
         def rep(parts, enf):
-            parts2, _, _, _ = refine_step_impl(d_lvl, parts, k, caps, kcap,
-                                               rparams, enf)
+            parts2, *_ = refine_step_impl(d_lvl, parts, k, caps, kcap,
+                                          rparams, enf)
             return parts2, None
         parts, _ = jax.lax.scan(rep, parts, enforce)
         return parts
@@ -418,49 +481,15 @@ def partition(hg: HostHypergraph, omega: int, delta: int,
         _refine = make_refine_fn(k, kcap, rparams, rlog, plan, race,
                                  race_seed)
 
-        refine_meta: dict = {len(levels): dict(structure=dict(
-            nodes=k, edges=int(d.n_edges), pins=int(d.n_pins)))}
+        structure = dict(nodes=k, edges=int(d.n_edges), pins=int(d.n_pins))
 
-        # refine the coarsest level too, then every uncoarsened level;
-        # kernel hits and quality scalars stay device values until the
-        # single batched readback below — telemetry adds no per-level syncs
-        quality_dev: dict = {}
-        refine_hits_dev: dict = {}
-        with otrace.span("refine") as sp_refine:
-            with otrace.span("refine_level", level=len(levels)):
-                parts, refine_hits_dev[len(levels)] = _refine(
-                    d, parts, caps, len(levels))
-            if collect_stats:
-                quality_dev[len(levels)] = ovcycle.quality_scalars(
-                    d, parts, caps, kcap, omega, delta)
-            for lvl in range(len(levels) - 1, -1, -1):
-                g = gammas[lvl]
-                d_lvl, caps_lvl = levels[lvl]
-                coarse_cap = parts.shape[0]
-                with otrace.span("refine_level", level=lvl):
-                    parts = jnp.where(
-                        jnp.arange(caps_lvl.n) < d_lvl.n_nodes,
-                        parts[jnp.clip(g[: caps_lvl.n], 0,
-                                       coarse_cap - 1)], 0)
-                    parts, refine_hits_dev[lvl] = _refine(d_lvl, parts,
-                                                          caps_lvl, lvl)
-                if collect_stats:
-                    quality_dev[lvl] = ovcycle.quality_scalars(
-                        d_lvl, parts, caps_lvl, kcap, omega, delta)
-                if collect_log:
-                    log.append(dict(kind="refine", level=lvl))
-            # block before the span closes: the refine tail would otherwise
-            # drain inside np.asarray(parts) below, after the timer stopped
-            jax.block_until_ready(parts)
-        # ONE batched readback for the kernel hits + quality scalars
-        hits_h, quality_h = jax.device_get(
-            ([refine_hits_dev[i] for i in range(len(levels) + 1)],
-             quality_dev))
-        refine_hits = [int(v) for v in hits_h]
-        for lvl in range(len(levels) + 1):
-            refine_meta.setdefault(lvl, {})
-            refine_meta[lvl]["kernel_refine"] = refine_hits[lvl]
-            refine_meta[lvl]["quality"] = quality_h.get(lvl)
+        # refine the coarsest level too, then every uncoarsened level
+        # (shared with kway/refine_from; one batched readback at the end)
+        parts, sp_refine, refine_meta, refine_hits, pins_hits = \
+            run_refine_loop(d, parts, caps, levels, gammas, _refine, kcap,
+                            omega, delta, collect_stats,
+                            log if collect_log else None)
+        refine_meta[len(levels)]["structure"] = structure
 
         with otrace.span("audit"):
             parts_np = np.asarray(parts)[: hg.n_nodes].astype(np.int64)
@@ -473,5 +502,271 @@ def partition(hg: HostHypergraph, omega: int, delta: int,
         timings=dict(total=sp_total.duration, coarsen=sp_coarsen.duration,
                      refine=sp_refine.duration),
         level_log=(log or []) + (rlog or []),
-        kernel_path=dict(coarsen=coarsen_hits, refine=refine_hits),
+        kernel_path=dict(coarsen=coarsen_hits, refine=refine_hits,
+                         pins=pins_hits),
         level_stats=ovcycle.assemble(coarsen_meta, refine_meta))
+
+
+# ---------------------------------------------------------------------------
+# Streaming repartitioning: warm-started refine-only solves
+# ---------------------------------------------------------------------------
+def refine_from(hg: HostHypergraph, parts, omega: int, delta: int,
+                *, n_parts: int | None = None, theta: int = 16,
+                use_kernels: bool = False,
+                refine_params: RefineParams | None = None,
+                collect_log: bool = False,
+                kcap_hint: int | None = None,
+                chain_rounds: int = 16,
+                plan=None, race: bool = True, race_seed: int = 0,
+                shard_graph: bool = False,
+                pair_cap: int | None = None, nbr_cap: int | None = None,
+                collect_stats: bool = False,
+                device_graph=None, caps: Caps | None = None,
+                mode: str = "warm") -> PartitionResult:
+    """Standalone refinement: the theta-rep refine loop of `partition()`
+    applied to an *existing* partition vector, skipping coarsening
+    entirely (``n_levels == 0``; the span tree contains no
+    ``coarsen_level`` spans by construction).
+
+    ``parts`` is a host vector of at least ``hg.n_nodes`` partition ids;
+    ``n_parts`` overrides the inferred partition count (``max+1``) —
+    required when trailing partitions happen to be empty but ids must stay
+    stable (the k-way warm path). ``plan``/``race``/``shard_graph`` mirror
+    `partition()`: with a mesh the refinement levels race replicas over
+    "data" and shard the pins pipelines over "model", bit-identical at
+    ``race=False``.
+
+    ``device_graph``/``caps`` short-circuit the device upload: the caller
+    (``repartition``'s warm cache) already holds graph storage at a known
+    capacity signature — reusing it keeps the jit cache warm across
+    resubmits. Both must be given together and are trusted to match ``hg``.
+    """
+    with otrace.span("partition", nodes=hg.n_nodes, edges=hg.n_edges,
+                     pins=hg.n_pins, omega=omega, delta=delta,
+                     mode=mode) as sp_total:
+        with otrace.span("setup"):
+            if (device_graph is None) != (caps is None):
+                raise ValueError(
+                    "device_graph and caps must be passed together")
+            if caps is None:
+                caps = Caps.for_host(hg, pair_cap=pair_cap, nbr_cap=nbr_cap)
+                # exact int64 audit before any device work (refinement's
+                # in-sequence gains expand the same pin pairs)
+                check_expansion_caps(caps, host_pair_count(hg))
+                if shard_graph:
+                    if plan is None:
+                        raise ValueError(
+                            "shard_graph=True requires a Plan (mesh)")
+                    from repro.dist.graph import sharded_from_host
+                    d = sharded_from_host(hg, caps, plan)
+                else:
+                    d = device_from_host(hg, caps)
+            else:
+                d = device_graph
+
+            parts_in = np.asarray(parts, np.int64).ravel()
+            if parts_in.shape[0] < hg.n_nodes:
+                raise ValueError(
+                    f"parts has {parts_in.shape[0]} entries for "
+                    f"{hg.n_nodes} nodes — apply deltas (which may add "
+                    f"nodes) via repartition(), or extend the vector")
+            parts_in = parts_in[: hg.n_nodes]
+            if parts_in.size and parts_in.min() < 0:
+                raise ValueError("parts must be non-negative")
+            k = (int(parts_in.max(initial=0)) + 1 if n_parts is None
+                 else int(n_parts))
+            if parts_in.size and int(parts_in.max(initial=0)) >= k:
+                raise ValueError(
+                    f"n_parts={k} is below max partition id "
+                    f"{int(parts_in.max())}")
+            if kcap_hint is None:
+                kcap = _next_pow2(k)
+            else:
+                if kcap_hint < k:
+                    raise ValueError(
+                        f"kcap_hint={kcap_hint} is below the partition "
+                        f"count k={k}")
+                kcap = kcap_hint
+            parts_dev = jnp.zeros((caps.n,), jnp.int32).at[: hg.n_nodes].set(
+                jnp.asarray(parts_in, jnp.int32))
+
+        rparams = refine_params or RefineParams(
+            omega=omega, delta=delta, theta=theta, use_kernels=use_kernels,
+            chain_rounds=chain_rounds)
+        rlog: list | None = [] if collect_log else None
+        _refine = make_refine_fn(k, kcap, rparams, rlog, plan, race,
+                                 race_seed)
+
+        parts_dev, sp_refine, refine_meta, refine_hits, pins_hits = \
+            run_refine_loop(d, parts_dev, caps, [], [], _refine, kcap,
+                            omega, delta, collect_stats,
+                            rlog if collect_log else None)
+        refine_meta[0]["structure"] = dict(
+            nodes=hg.n_nodes, edges=hg.n_edges, pins=hg.n_pins)
+
+        with otrace.span("audit"):
+            parts_np = np.asarray(parts_dev)[: hg.n_nodes].astype(np.int64)
+            if n_parts is None:
+                uniq, parts_np = np.unique(parts_np, return_inverse=True)
+                n_out = len(uniq)
+            else:
+                # pinned id space (k-way warm path): empty partitions keep
+                # their ids, no compaction
+                n_out = k
+            aud = metrics.audit(hg, parts_np, omega=omega, delta=delta)
+    return PartitionResult(
+        parts=parts_np, n_parts=n_out, n_levels=0,
+        connectivity=aud["connectivity"], cut_net=aud["cut_net"], audit=aud,
+        timings=dict(total=sp_total.duration, coarsen=0.0,
+                     refine=sp_refine.duration),
+        level_log=rlog or [],
+        kernel_path=dict(coarsen=[], refine=refine_hits, pins=pins_hits),
+        level_stats=ovcycle.assemble([], refine_meta),
+        mode=mode)
+
+
+@dataclasses.dataclass
+class WarmCache:
+    """Caller-owned device-storage cache for `repartition`: the capacity
+    signature and graph storage of the last solve. A valid cache lets a
+    resubmit skip both `Caps.for_host` and the full host->device upload
+    (sharded storage updates by stripe-local scatters), and — because the
+    caps are unchanged — reuse every compiled executable. `repartition`
+    mutates it in place; pass a fresh instance (or None) to start cold."""
+
+    caps: Caps | None = None
+    d: object | None = None   # DeviceHypergraph | ShardedHypergraph
+
+    def invalidate(self) -> None:
+        self.caps = None
+        self.d = None
+
+
+def _extend_parts(prev_parts, n_nodes: int, k: int) -> np.ndarray:
+    """Deterministic placement for nodes added since the previous solve:
+    each new node joins the currently least-loaded partition (ties ->
+    lowest id), updating loads as it goes. Node deletions are tombstones
+    (ids stable), so existing entries never shift."""
+    prev = np.asarray(prev_parts, np.int64).ravel()
+    if prev.shape[0] >= n_nodes:
+        return prev[:n_nodes]
+    sizes = np.bincount(prev, minlength=max(k, 1))
+    out = np.concatenate([prev, np.zeros(n_nodes - prev.shape[0], np.int64)])
+    for n in range(prev.shape[0], n_nodes):
+        p = int(np.argmin(sizes))
+        out[n] = p
+        sizes[p] += 1
+    return out
+
+
+def repartition(hg: HostHypergraph, prev_parts, omega: int, delta: int,
+                *, deltas=None, drift_threshold: float = 0.25,
+                cache: WarmCache | None = None,
+                n_parts: int | None = None,
+                theta: int = 16, n_cands: int = 4,
+                use_kernels: bool = False,
+                refine_params: RefineParams | None = None,
+                collect_log: bool = False,
+                kcap_hint: int | None = None,
+                chain_rounds: int = 16, max_levels: int = 64,
+                matching: str = "exact",
+                plan=None, race: bool = True, race_seed: int = 0,
+                dist_coarsen: bool = True, compensated_psum: bool = False,
+                shard_graph: bool = False,
+                pair_cap: int | None = None, nbr_cap: int | None = None,
+                collect_stats: bool = False) -> PartitionResult:
+    """Streaming repartitioning: apply ``deltas`` (a `GraphDelta` or a
+    sequence of them) to ``hg`` **in place**, then re-solve warm from
+    ``prev_parts`` — refinement only, no coarsening — falling back to a
+    full cold V-cycle when the accumulated ``hg.drift`` exceeds
+    ``drift_threshold`` or the warm solution fails the Omega/Delta +
+    distinct-incident-hyperedge audit. The result's ``mode`` records which
+    path produced it ("warm" / "fallback-drift" / "fallback-audit"; a
+    zero-delta call with no cache is bit-identical to `refine_from`).
+
+    ``cache`` (a `WarmCache`) carries device storage across calls: with a
+    valid cache and sharded storage (``shard_graph`` + ``plan``) the deltas
+    apply on device by stripe-local scatters
+    (`dist.graph.apply_delta_sharded`); a `CapacityError` from the PR 5
+    audit machinery — the post-delta graph outgrew the cached capacity
+    signature — invalidates the cache and the solve proceeds warm at fresh
+    caps (one re-upload + recompile, not a cold solve). Cold fallbacks
+    reset the drift accumulator and invalidate the cache; warm solves keep
+    accumulating drift, so repeated small deltas eventually trigger one
+    consolidating cold solve."""
+    from repro.core.hypergraph import DeviceHypergraph  # noqa: F401
+
+    if isinstance(deltas, GraphDelta):
+        deltas = [deltas]
+    deltas = list(deltas or [])
+    use_sharded = shard_graph and plan is not None
+
+    for dl in deltas:
+        if (use_sharded and cache is not None and cache.caps is not None
+                and cache.d is not None):
+            from repro.dist.graph import (ShardedHypergraph,
+                                          apply_delta_sharded)
+            if isinstance(cache.d, ShardedHypergraph):
+                try:
+                    cache.d = apply_delta_sharded(cache.d, hg, dl,
+                                                  cache.caps, plan)
+                except CapacityError:
+                    # resize trigger: host mirror is updated; rebuild
+                    # device storage at fresh caps, stay warm
+                    cache.invalidate()
+                continue
+        apply_delta(hg, dl)
+        if cache is not None and cache.caps is not None:
+            cache.d = None  # replicated storage refreshes wholesale below
+            try:
+                check_fits_caps(hg, cache.caps)
+            except CapacityError:
+                cache.invalidate()
+
+    k_prev = (int(np.asarray(prev_parts).max(initial=0)) + 1
+              if n_parts is None else int(n_parts))
+    parts0 = _extend_parts(prev_parts, hg.n_nodes, k_prev)
+
+    cold_kwargs = dict(
+        n_cands=n_cands, theta=theta, use_kernels=use_kernels,
+        refine_params=refine_params, max_levels=max_levels,
+        collect_log=collect_log, kcap_hint=kcap_hint, matching=matching,
+        chain_rounds=chain_rounds, plan=plan, race=race,
+        race_seed=race_seed, dist_coarsen=dist_coarsen,
+        compensated_psum=compensated_psum, shard_graph=shard_graph,
+        pair_cap=pair_cap, nbr_cap=nbr_cap, collect_stats=collect_stats)
+
+    def _cold(mode: str) -> PartitionResult:
+        res = partition(hg, omega, delta, **cold_kwargs)
+        res.mode = mode
+        hg.reset_drift()
+        if cache is not None:
+            cache.invalidate()
+        return res
+
+    if hg.drift > drift_threshold:
+        return _cold("fallback-drift")
+
+    # ---- warm path: reuse / rebuild device storage, refine only ----------
+    wc = cache if cache is not None else WarmCache()
+    if wc.caps is None:
+        wc.d = None
+        wc.caps = Caps.for_host(hg, pair_cap=pair_cap, nbr_cap=nbr_cap)
+        check_expansion_caps(wc.caps, host_pair_count(hg))
+    if wc.d is None:
+        if use_sharded:
+            from repro.dist.graph import sharded_from_host
+            wc.d = sharded_from_host(hg, wc.caps, plan)
+        else:
+            wc.d = device_from_host(hg, wc.caps)
+    res = refine_from(
+        hg, parts0, omega, delta, n_parts=n_parts, theta=theta,
+        use_kernels=use_kernels, refine_params=refine_params,
+        collect_log=collect_log, kcap_hint=kcap_hint,
+        chain_rounds=chain_rounds, plan=plan, race=race,
+        race_seed=race_seed, shard_graph=shard_graph,
+        collect_stats=collect_stats, device_graph=wc.d, caps=wc.caps,
+        mode="warm")
+    if not (res.audit["size_ok"] and res.audit["inbound_ok"]):
+        return _cold("fallback-audit")
+    return res

@@ -26,8 +26,8 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import metrics
 from repro.core.generate import _finalize
-from repro.core.hypergraph import HostHypergraph
-from repro.core.kway import partition_kway
+from repro.core.hypergraph import GraphDelta, HostHypergraph
+from repro.core.kway import partition_kway, repartition_kway
 from repro.core.partitioner import partition
 
 
@@ -65,31 +65,49 @@ def routing_hypergraph(trace: np.ndarray, n_experts: int) -> HostHypergraph:
     return _finalize(n_experts, pin_lists, nsrc, w)
 
 
-def plan_expert_placement(cfg: ArchConfig, n_shards: int,
-                          trace: np.ndarray | None = None,
-                          delta: int | None = None, seed: int = 0,
-                          theta: int = 8) -> dict:
-    """Returns dict(perm [E] old->new expert slot, parts [E], report)."""
-    mo = cfg.moe
-    assert mo is not None and mo.n_experts % n_shards == 0
-    if trace is None:
-        trace = synth_routing_trace(cfg, seed=seed)
-    hg = routing_hypergraph(trace, mo.n_experts)
-    if delta is None:
-        res = partition_kway(hg, k=n_shards, eps=0.0, theta=theta,
-                             coarse_target=max(4 * n_shards, 16))
-        parts = res.parts
-    else:
-        res = partition(hg, omega=mo.n_experts // n_shards, delta=delta,
-                        theta=theta)
-        parts = res.parts
-    # balance fix-up: cap shards at E/n_shards, spill by id
-    cap = mo.n_experts // n_shards
+def routing_delta(old_hg: HostHypergraph,
+                  new_hg: HostHypergraph) -> GraphDelta:
+    """`GraphDelta` taking the routing hypergraph of the previous trace
+    window to the current one: h-edges (deduplicated co-activation sets)
+    are matched by pin set; vanished sets delete, fresh sets insert, and a
+    set whose observed frequency changed is replaced (delete + insert —
+    `GraphDelta` has no in-place weight update, and replacement keeps the
+    pin accounting behind the drift metric honest). Both graphs must share
+    the expert id space (same node count; node churn is out of scope for
+    routing traces)."""
+    if old_hg.n_nodes != new_hg.n_nodes:
+        raise ValueError("routing graphs must share the expert id space")
+
+    def keyed(hg: HostHypergraph) -> dict[tuple, int]:
+        return {tuple(int(p) for p in hg.edge(e)): e
+                for e in range(hg.n_edges)}
+
+    old_keys, new_keys = keyed(old_hg), keyed(new_hg)
+    dels, adds = [], []
+    for key, e in old_keys.items():
+        ne = new_keys.get(key)
+        if ne is None or new_hg.edge_w[ne] != old_hg.edge_w[e]:
+            dels.append(e)
+    for key, ne in sorted(new_keys.items()):
+        oe = old_keys.get(key)
+        if oe is None or old_hg.edge_w[oe] != new_hg.edge_w[ne]:
+            adds.append((np.array(key, np.int32),
+                         int(new_hg.edge_nsrc[ne]),
+                         float(new_hg.edge_w[ne])))
+    return GraphDelta(del_edges=tuple(dels), add_edges=tuple(adds))
+
+
+def _placement_from_parts(hg: HostHypergraph, parts: np.ndarray,
+                          n_experts: int, n_shards: int,
+                          delta: int | None) -> dict:
+    """Shared tail of the placement planners: cap-respecting slot
+    assignment from a raw partition vector (spill by id), audit, and the
+    identity-placement fallback guard."""
+    cap = n_experts // n_shards
     buckets: dict[int, list[int]] = {}
-    for e in range(mo.n_experts):
+    for e in range(n_experts):
         buckets.setdefault(int(parts[e]) % n_shards, []).append(e)
-    slots = np.full(mo.n_experts, -1, np.int64)
-    free: list[int] = []
+    slots = np.full(n_experts, -1, np.int64)
     shard_fill = [0] * n_shards
     overflow = []
     for p in sorted(buckets):
@@ -108,16 +126,64 @@ def plan_expert_placement(cfg: ArchConfig, n_shards: int,
     report = metrics.audit(hg, shard_of, omega=cap,
                            delta=delta if delta else 2 ** 29)
     # baseline: identity placement; never ship a placement worse than it
-    ident = np.arange(mo.n_experts) // cap
+    ident = np.arange(n_experts) // cap
     report["connectivity_identity"] = metrics.connectivity(hg, ident)
     if report["connectivity"] > report["connectivity_identity"]:
-        slots = np.arange(mo.n_experts, dtype=np.int64)
+        slots = np.arange(n_experts, dtype=np.int64)
         shard_of = ident
         report["connectivity"] = report["connectivity_identity"]
         report["fell_back_to_identity"] = True
     report["a2a_reduction"] = (
         report["connectivity_identity"] / max(report["connectivity"], 1e-9))
     return dict(perm=slots.astype(np.int32), parts=shard_of, report=report)
+
+
+def plan_expert_placement(cfg: ArchConfig, n_shards: int,
+                          trace: np.ndarray | None = None,
+                          delta: int | None = None, seed: int = 0,
+                          theta: int = 8) -> dict:
+    """Returns dict(perm [E] old->new expert slot, parts [E], report,
+    graph, raw_parts) — ``graph``/``raw_parts`` are the warm-start state
+    `replan_expert_placement` resumes from."""
+    mo = cfg.moe
+    assert mo is not None and mo.n_experts % n_shards == 0
+    if trace is None:
+        trace = synth_routing_trace(cfg, seed=seed)
+    hg = routing_hypergraph(trace, mo.n_experts)
+    if delta is None:
+        res = partition_kway(hg, k=n_shards, eps=0.0, theta=theta,
+                             coarse_target=max(4 * n_shards, 16))
+    else:
+        res = partition(hg, omega=mo.n_experts // n_shards, delta=delta,
+                        theta=theta)
+    out = _placement_from_parts(hg, res.parts, mo.n_experts, n_shards, delta)
+    out.update(graph=hg, raw_parts=res.parts, mode=res.mode,
+               n_levels=res.n_levels)
+    return out
+
+
+def replan_expert_placement(cfg: ArchConfig, prev: dict, n_shards: int,
+                            trace: np.ndarray, theta: int = 8,
+                            drift_threshold: float = 0.5) -> dict:
+    """Warm re-placement under a shifted routing trace: diff the new
+    trace's routing hypergraph against the previous one (`routing_delta`),
+    apply the delta in place, and re-refine from the previous raw parts
+    (`kway.repartition_kway` — no coarsening, no cold solve) unless drift
+    or the balance audit forces the cold fallback. ``prev`` is the dict a
+    previous `plan_expert_placement` / `replan_expert_placement` returned;
+    the returned dict is the same shape (chain them across trace
+    windows)."""
+    mo = cfg.moe
+    hg = prev["graph"]
+    dl = routing_delta(hg, routing_hypergraph(trace, mo.n_experts))
+    res = repartition_kway(hg, prev["raw_parts"], k=n_shards, eps=0.0,
+                           deltas=dl, drift_threshold=drift_threshold,
+                           theta=theta,
+                           coarse_target=max(4 * n_shards, 16))
+    out = _placement_from_parts(hg, res.parts, mo.n_experts, n_shards, None)
+    out.update(graph=hg, raw_parts=res.parts, mode=res.mode,
+               n_levels=res.n_levels)
+    return out
 
 
 def layer_hypergraph(cfg: ArchConfig) -> HostHypergraph:

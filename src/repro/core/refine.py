@@ -515,14 +515,19 @@ def refine_step_impl(d: DeviceHypergraph, parts: jax.Array,
     ``refine_step`` and ``dist.partition``'s shard_map'd racing step
     (``ctx`` shards the pins/pairs pipelines, ``tie_rank`` diversifies
     replicas)."""
-    if params.use_kernels and ctx.axis is None:
-        # the pins kernel densifies the whole edge axis (no row striping
-        # yet), so it serves single-device runs and 1-device meshes; the
-        # sharded path keeps the stripe-local segment counting
+    if params.use_kernels:
         from repro.kernels.pins_count import ops as pc_ops
-        pins, pins_in = pc_ops.pins_matrix_kernel(d, parts, caps, kcap)
+        # replicated mesh-independent predicate (branch parity, see
+        # repro.kernels): the pins kernel runs stripe-locally per shard
+        fits = pc_ops.fits_kernel(d, caps)
+        pins, pins_in = jax.lax.cond(
+            fits,
+            lambda: pc_ops.pins_matrix_kernel(d, parts, caps, kcap, ctx),
+            lambda: pins_matrix(d, parts, caps, kcap, ctx))
+        pins_taken = fits.astype(jnp.int32)
     else:
         pins, pins_in = pins_matrix(d, parts, caps, kcap, ctx)
+        pins_taken = jnp.int32(0)
     move_to, gain_iso, _, kernel_taken = propose_moves(
         d, parts, pins, caps, kcap, params, enforce_size, n_parts, ctx)
     seq, _ = build_sequence(d, parts, move_to, gain_iso, caps, kcap, params,
@@ -534,7 +539,7 @@ def refine_step_impl(d: DeviceHypergraph, parts: jax.Array,
     parts_new = jnp.where(apply_mask, jnp.where(move_to >= 0, move_to, parts),
                           parts)
     return (parts_new, applied_gain,
-            jnp.sum(apply_mask.astype(jnp.int32)), kernel_taken)
+            jnp.sum(apply_mask.astype(jnp.int32)), kernel_taken, pins_taken)
 
 
 @partial(jax.jit, static_argnames=("caps", "kcap", "params", "enforce_size"))
@@ -549,16 +554,19 @@ def refine_level(d: DeviceHypergraph, parts: jax.Array, n_parts,
                  caps: Caps, kcap: int, params: RefineParams,
                  log: list | None = None):
     """Theta repetitions; first half may propose size-violating moves.
-    Returns (parts, kernel_hits) — the device-scalar count of repetitions
-    whose gains dispatch took the Pallas branch (0..theta)."""
+    Returns (parts, (kernel_hits, pins_hits)) — device-scalar counts of
+    repetitions whose gains / pins dispatch took the Pallas branch
+    (each 0..theta)."""
     n_parts = jnp.asarray(n_parts, jnp.int32)
     hits = jnp.int32(0)
+    phits = jnp.int32(0)
     for rep in range(params.theta):
         enforce = rep >= params.theta // 2
-        parts, g, nmv, kt = refine_step(d, parts, n_parts, caps, kcap,
-                                        params, enforce)
+        parts, g, nmv, kt, pt = refine_step(d, parts, n_parts, caps, kcap,
+                                            params, enforce)
         hits = hits + kt
+        phits = phits + pt
         if log is not None:
             log.append(dict(rep=rep, gain=float(g), applied=int(nmv),
                             kernel=int(kt)))
-    return parts, hits
+    return parts, (hits, phits)

@@ -50,15 +50,19 @@ forced host devices on (2, 4) and (1, 8) meshes.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.hypergraph import (Caps, DeviceHypergraph, HostHypergraph,
-                                   host_from_device, packed_host_arrays)
+from repro.core.hypergraph import (Caps, DeviceHypergraph, GraphDelta,
+                                   HostHypergraph, apply_delta,
+                                   check_fits_caps, host_from_device,
+                                   packed_host_arrays)
 from repro.dist.sharding import Plan
+from repro.models import common
 
 # the pins-sized storage arrays that stripe over "model"; everything else
 # in DeviceHypergraph is O(N)/O(E) or scalar and stays replicated
@@ -164,3 +168,77 @@ def host_from_sharded(d: ShardedHypergraph) -> HostHypergraph:
     and `host_from_device` slices the live prefixes (stripe padding beyond
     ``caps.p`` carries sentinels past ``n_pins``, so it never surfaces)."""
     return host_from_device(d.g)
+
+
+# --------------------------------------------------------------------------
+# Incremental updates (streaming repartitioning)
+# --------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _stripe_scatter(mesh, per: int):
+    """shard_map'd sparse update of one "model"-striped pins array: each
+    shard rebases the global update positions onto its own stripe and drops
+    the rest (``mode="drop"``) — no cross-shard traffic at all, since every
+    global lane lives on exactly one shard. Cached per (mesh, stripe size);
+    jit re-specializes per update-batch shape/dtype."""
+
+    def body(stripe, pos, val):
+        i = jax.lax.axis_index("model").astype(jnp.int32)
+        lo = i * per
+        lp = jnp.where((pos >= lo) & (pos < lo + per), pos - lo, per)
+        return stripe.at[lp].set(val, mode="drop")
+
+    fn = common.shard_map(body, mesh=mesh,
+                          in_specs=(P("model"), P(), P()),
+                          out_specs=P("model"))
+    return jax.jit(fn)
+
+
+def apply_delta_sharded(sh: ShardedHypergraph, hg: HostHypergraph,
+                        delta: GraphDelta, caps: Caps,
+                        plan: Plan) -> ShardedHypergraph:
+    """Apply one ``GraphDelta`` batch to the host mirror ``hg`` (in place)
+    *and* to the sharded device storage ``sh``, in place of a full
+    re-upload.
+
+    The replicated O(N)/O(E) arrays (offsets, weights, sizes, scalars)
+    refresh wholesale — they are cheap and a delta shifts offsets globally
+    anyway. The three O(pins) striped arrays update by **stripe-local
+    scatters** of only the changed lanes: the host computes the packed-array
+    diff, pads the (position, value) batch to a power of two, and each
+    shard writes the updates that land in its own stripe (``mode="drop"``
+    discards the rest). A striped array with no changed lanes is kept
+    untouched (same device buffer); a batch touching more than half the
+    lanes falls back to a fresh striped ``device_put``.
+
+    Raises ``CapacityError`` when the post-delta graph no longer fits
+    ``caps`` (the PR 5 resize trigger) **before touching device state**;
+    the host mirror is still updated either way, so the caller rebuilds
+    device storage from it at fresh caps."""
+    nshards = model_shards(plan)
+    ptot = stripe_total(caps, nshards)
+    per = ptot // nshards
+    old = packed_host_arrays(hg, caps, pcap=ptot)
+    apply_delta(hg, delta)
+    check_fits_caps(hg, caps)
+    new = packed_host_arrays(hg, caps, pcap=ptot)
+
+    repl = NamedSharding(plan.mesh, P())
+    striped = NamedSharding(plan.mesh, P("model"))
+    updates = {k: jax.device_put(v, repl) for k, v in new.items()
+               if k not in PINS_FIELDS}
+    for f in PINS_FIELDS:
+        changed = np.nonzero(old[f] != new[f])[0]
+        if changed.size == 0:
+            continue
+        if changed.size > ptot // 2:
+            updates[f] = jax.device_put(new[f], striped)
+            continue
+        ucap = max(8, 1 << int(changed.size - 1).bit_length())
+        pos = np.full((ucap,), ptot, np.int32)
+        pos[: changed.size] = changed
+        val = np.zeros((ucap,), new[f].dtype)
+        val[: changed.size] = new[f][changed]
+        fn = _stripe_scatter(plan.mesh, per)
+        updates[f] = fn(getattr(sh.g, f), jnp.asarray(pos), jnp.asarray(val))
+    return ShardedHypergraph(g=dataclasses.replace(sh.g, **updates),
+                             nshards=nshards)

@@ -182,10 +182,10 @@ def _build_step(mesh, data_axis: str, model_axis: str | None, nshards: int,
             tie_rank = jnp.where(r == 0, ids, perm)
         else:
             tie_rank = ids
-        parts_new, gain, nmv, kt = refine_step_impl(
+        parts_new, gain, nmv, kt, pt = refine_step_impl(
             d, parts, n_parts, caps, kcap, params, enforce, ctx, tie_rank)
         if data_axis is None:   # shard-only mesh: nothing to race
-            return parts_new, gain, nmv, kt
+            return parts_new, gain, nmv, kt, pt
         # race resolution: scalar gains all-gathered, winner's partition
         # vector broadcast by psum of the masked vector (no parts gather)
         gains = jax.lax.all_gather(gain, data_axis)        # [n_replicas]
@@ -194,11 +194,12 @@ def _build_step(mesh, data_axis: str, model_axis: str | None, nshards: int,
         parts_out = jax.lax.psum(jnp.where(win, parts_new, 0), data_axis)
         nmv_out = jax.lax.psum(jnp.where(win, nmv, 0), data_axis)
         kt_out = jax.lax.psum(jnp.where(win, kt, 0), data_axis)
-        return parts_out, gains[best], nmv_out, kt_out
+        pt_out = jax.lax.psum(jnp.where(win, pt, 0), data_axis)
+        return parts_out, gains[best], nmv_out, kt_out, pt_out
 
     fn = common.shard_map(body, mesh=mesh,
                           in_specs=(graph_pspecs(striped), P(), P(), P(), P()),
-                          out_specs=(P(), P(), P(), P()))
+                          out_specs=(P(), P(), P(), P(), P()))
     return jax.jit(fn)
 
 
@@ -219,7 +220,8 @@ def refine_level(d, parts, n_parts, caps: Caps, kcap: int,
     single-device kernel path. Returns ``(parts, kernel_hits)`` — the
     device-scalar count of repetitions whose gains dispatch took the
     Pallas branch (0..theta; mesh-independent by the branch-parity
-    invariant)."""
+    invariant). The same holds for the stripe-local pins-count dispatch;
+    ``refine_level`` returns ``(parts, (kernel_hits, pins_hits))``."""
     d, striped = _graph_arg(d)
     data_axis, model_axis, nshards = plan_axes(plan)
     step = _build_step(plan.mesh, data_axis, model_axis, nshards,
@@ -227,15 +229,17 @@ def refine_level(d, parts, n_parts, caps: Caps, kcap: int,
     n_parts = jnp.asarray(n_parts, jnp.int32)
     key = jax.random.PRNGKey(seed)
     hits = jnp.int32(0)
+    phits = jnp.int32(0)
     for rep in range(params.theta):
         enforce = jnp.asarray(rep >= params.theta // 2)
-        parts, g, nmv, kt = step(d, parts, n_parts,
-                                 jax.random.fold_in(key, rep), enforce)
+        parts, g, nmv, kt, pt = step(d, parts, n_parts,
+                                     jax.random.fold_in(key, rep), enforce)
         hits = hits + kt
+        phits = phits + pt
         if log is not None:
             log.append(dict(rep=rep, gain=float(g), applied=int(nmv),
                             raced=bool(race), kernel=int(kt)))
-    return parts, hits
+    return parts, (hits, phits)
 
 
 @functools.lru_cache(maxsize=None)

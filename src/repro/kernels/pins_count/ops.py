@@ -1,14 +1,26 @@
-"""jit'd wrapper: CSR hypergraph -> dense tiles -> pins_count kernel.
+"""Wrapper: CSR hypergraph -> dense tiles -> pins_count kernel.
 
 Produces the same [kcap, Ecap] pins / pins_in matrices as the pure-JAX
 `repro.core.refine.pins_matrix`, routing the counting through the Pallas
 kernel. Densification (CSR -> [E, dbar]) is a cheap scatter; dbar is bounded
 by Caps.d_max, which is monotone non-increasing under coarsening, so one
-static shape serves the whole run.
+static shape serves a whole cold run. (Incremental deltas can break that
+monotonicity — an inserted edge may exceed the stale ``d_max`` — which is
+exactly what the runtime ``fits_kernel`` predicate guards: oversized edges
+fall back to the segment path instead of silently truncating.)
+
+Sharded mode (``ctx.axis`` set, inside ``dist.partition``'s shard_map —
+same pattern as the `gains`/`pair_scores` wrappers): the densifying scatter
+runs over this shard's pin-lane stripe (``ctx.lanes``/``gread`` —
+``edge_pins`` may be striped storage), the disjoint integer scatters psum
+into the replicated dense [Erows, dbar] tiles, and each shard runs the
+kernel only on its contiguous ``rows_per`` row block of the edge axis; the
+per-shard count tiles concatenate in shard order (``ctx.gather`` — disjoint
+rows, exact). Per-row kernel arithmetic is independent of tile height, so
+the sharded output is bit-identical to the single-device kernel output,
+which remains the ``ctx=None`` degenerate case of the same code path.
 """
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -19,41 +31,68 @@ from repro.kernels.pins_count.kernel import pins_count_pallas
 from repro.utils import segops
 
 
-def densify_edges(d: DeviceHypergraph, parts: jax.Array, caps: Caps,
-                  kcap: int, dbar: int):
-    """[Ecap_pad, dbar] partition id per (edge, slot); padding = kcap."""
-    t = jnp.arange(caps.p, dtype=jnp.int32)
-    live = t < d.n_pins
-    e_of = segops.rows_from_offsets(d.edge_off, caps.p, caps.e)
+def tile_bounds(caps: Caps) -> tuple[int, int]:
+    """(dbar, dc): static per-edge slot width (cardinality bound rounded to
+    the column tile) and the column tile size. Mesh-independent by design —
+    see the dispatch contract in ``repro.kernels``."""
+    dc = min(128, segops.round_up(caps.d_max, 8))
+    return segops.round_up(caps.d_max, dc), dc
+
+
+def stripe_rows(caps: Caps, nshards: int) -> int:
+    """Edge rows per shard tile (ceil-divided stripe, 8-row multiple —
+    te=8 is the kernel's row tile)."""
+    return segops.round_up(-(-caps.e // max(nshards, 1)), 8)
+
+
+def fits_kernel(d: DeviceHypergraph, caps: Caps) -> jax.Array:
+    """Runtime predicate: every live edge's cardinality fits the static
+    ``dbar`` slot width, so densification drops no pin. ``edge_off`` is
+    replicated even under a mesh, so no combine is needed and the result is
+    a valid uniform `lax.cond` predicate. Always true on a cold run
+    (``dbar >= caps.d_max`` by construction); can go false after
+    incremental deltas insert an edge wider than the stale bound."""
+    dbar, _ = tile_bounds(caps)
+    card = d.edge_off[1:] - d.edge_off[:-1]
+    ids = jnp.arange(caps.e)
+    return jnp.max(jnp.where(ids < d.n_edges, card, 0)) <= dbar
+
+
+def pins_matrix_kernel(d: DeviceHypergraph, parts: jax.Array, caps: Caps,
+                       kcap: int,
+                       ctx: segops.ShardCtx = segops.ShardCtx()):
+    """Drop-in replacement for refine.pins_matrix via the Pallas kernel
+    (stripe-local on a mesh; see module docstring). Callers jit (it runs
+    inside ``refine_step`` / the shard_map'd dist step), so the wrapper
+    itself stays a plain function — ``ShardCtx`` is not a hashable static."""
+    dbar, dc = tile_bounds(caps)
+    rows_per = stripe_rows(caps, ctx.nshards)
+    erows = rows_per * max(ctx.nshards, 1)
+    t, t_ok = ctx.lanes(caps.p)
+    live = t_ok & (t < d.n_pins)
+    e_of = ctx.rows(d.edge_off, t, caps.p, caps.e)
     e_safe = jnp.clip(e_of, 0, caps.e - 1)
     rel = t - d.edge_off[e_safe]
-    pin = jnp.clip(d.edge_pins, 0, caps.n - 1)
+    pin = jnp.clip(ctx.gread(d.edge_pins, t, live, 0), 0, caps.n - 1)
     p_of = parts[pin]
     is_dst = live & (rel >= d.edge_nsrc[e_safe])
-    epad = segops.round_up(caps.e, 8)
-    flat_pos = jnp.where(live & (rel < dbar), e_safe * dbar + rel,
-                         epad * dbar)
-    parts_dense = jnp.full((epad * dbar + 1,), kcap, jnp.int32)
-    parts_dense = parts_dense.at[flat_pos].set(jnp.where(live, p_of, kcap),
-                                               mode="drop")
-    dst_dense = jnp.zeros((epad * dbar + 1,), jnp.int32)
-    dst_dense = dst_dense.at[flat_pos].set(is_dst.astype(jnp.int32),
-                                           mode="drop")
-    return (parts_dense[:-1].reshape(epad, dbar),
-            dst_dense[:-1].reshape(epad, dbar))
-
-
-@partial(jax.jit, static_argnames=("caps", "kcap"))
-def pins_matrix_kernel(d: DeviceHypergraph, parts: jax.Array, caps: Caps,
-                       kcap: int):
-    """Drop-in replacement for refine.pins_matrix via the Pallas kernel."""
-    dc = min(128, segops.round_up(caps.d_max, 8))
-    dbar = segops.round_up(caps.d_max, dc)
-    parts_dense, dst_dense = densify_edges(d, parts, caps, kcap, dbar)
+    ok = live & (rel < dbar)
+    pos = jnp.where(ok, e_safe * dbar + rel, erows * dbar)
+    # disjoint integer scatters (each global pin lane lives on exactly one
+    # shard) -> the psum combine is exact. Partition ids scatter as p+1
+    # over a zeros base so unwritten slots read 0 = padding (mapped to the
+    # out-of-range id kcap below), matching the single-device densify fill.
+    pd = ctx.psum(jnp.zeros((erows * dbar + 1,), jnp.int32).at[pos].set(
+        jnp.where(ok, p_of + 1, 0), mode="drop")[:-1])
+    dd = ctx.psum(jnp.zeros((erows * dbar + 1,), jnp.int32).at[pos].set(
+        is_dst.astype(jnp.int32), mode="drop")[:-1])
+    parts_dense = jnp.where(pd > 0, pd - 1, kcap).reshape(erows, dbar)
+    dst_dense = dd.reshape(erows, dbar)
+    own_p = ctx.stripe(parts_dense)
+    own_d = ctx.stripe(dst_dense)
     kdim = max(kcap, 8)
-    pins, pins_in = pins_count_pallas(parts_dense, dst_dense, kdim,
-                                      te=8, dc=dc,
+    pins, pins_in = pins_count_pallas(own_p, own_d, kdim, te=8, dc=dc,
                                       interpret=pallas_interpret())
-    pins = pins[: caps.e, :kcap].T
-    pins_in = pins_in[: caps.e, :kcap].T
+    pins = ctx.gather(pins)[: caps.e, :kcap].T
+    pins_in = ctx.gather(pins_in)[: caps.e, :kcap].T
     return pins, pins_in

@@ -113,6 +113,30 @@ class Registry:
             h[1] += v
             h[2] += 1
 
+    def histogram(self, name: str, buckets: tuple | None = None,
+                  **labels) -> None:
+        """Pre-register an empty histogram series (zero counts, sum 0,
+        count 0) so dumps carry it before the first `observe` — the
+        histogram analogue of ``counter(name, 0)``. Bucket edges fix here
+        exactly as at a first observation; a series that already exists is
+        left untouched."""
+        with self._lock:
+            if name not in self._hists:
+                edges = tuple(buckets) if buckets else DEFAULT_BUCKETS
+                if edges[-1] != float("inf"):
+                    edges = edges + (float("inf"),)
+                self._hists[name] = (edges, {})
+            edges, series = self._hists[name]
+            key = _label_key(labels)
+            if key not in series:
+                if len(series) >= self.max_series:
+                    ov = self._counters.setdefault("obs.series_overflow", {})
+                    k2 = (("name", name),)
+                    ov[k2] = ov.get(k2, 0.0) + 1.0
+                    key = _OVERFLOW_LABELS
+                if key not in series:
+                    series[key] = [[0] * len(edges), 0.0, 0]
+
     # ------------------------------------------------------------- reading
     def value(self, name: str, **labels) -> float:
         """Current value of one counter/gauge series (0 when absent)."""

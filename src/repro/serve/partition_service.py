@@ -22,6 +22,14 @@ Scheduling policy (three lanes):
   any bucket) route to the existing host-driven multilevel solve
   (`core.partitioner.partition`), mesh-sharded when the service holds a
   `Plan` (`plan=`, `shard_graph=True` — the PR-5 memory-sharded storage).
+* **Warm repartition** — a `submit(..., key=...)` request caches its
+  solution; `resubmit(key, deltas=...)` applies the incremental
+  `GraphDelta` batch to the cached graph immediately (so watchdog requeues
+  never double-apply) and queues a refine-only warm solve
+  (`core.partitioner.repartition`) from the previous parts, with the
+  drift / audit cold fallbacks handled inside the solver. The lane shares
+  the FIFO order pick and the full supervision machinery, and records the
+  ``repartition.*`` counter/histogram series.
 * **Supervision** — every blocking device solve is armed with
   `dist.ft.StepWatchdog` (`with wd.watch(step):`). A solve that raises, is
   killed by fault injection, or stalls past the deadline is *requeued* with
@@ -54,8 +62,8 @@ from repro.core import metrics
 from repro.core.hypergraph import (Caps, CapacityError, DeviceHypergraph,
                                    HostHypergraph, check_expansion_caps,
                                    host_pair_count, packed_host_arrays)
-from repro.core.partitioner import (_batch_solver, partition,
-                                    partition_batch_device)
+from repro.core.partitioner import (WarmCache, _batch_solver, partition,
+                                    partition_batch_device, repartition)
 from repro.dist.ft import StepWatchdog
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as otrace
@@ -91,6 +99,7 @@ class ServiceResult:
     cut_net: float
     audit: dict
     route: str                 # "bucket" | "vcycle" | "vcycle-sharded"
+                               # | "warm" (keyed resubmit, repartition lane)
     bucket: Bucket | None      # the solving bucket (bucket route only)
     restarts: int              # failed/stalled solves this request survived
     bumps: int                 # capacity bumps to a bigger bucket
@@ -114,6 +123,22 @@ class _Request:
     enqueued_at: float = 0.0   # reset by every (re-)enqueue
     queue_wait_s: float = 0.0  # accumulated across attempts
     solve_s: float = 0.0       # accumulated across attempts
+    warm_key: object = None    # set -> request is keyed (resumable)
+    warm_key_cold: bool = False  # keyed, but this solve is the cold seed
+
+
+@dataclasses.dataclass
+class _WarmState:
+    """Per-key cached solution: the live host graph, its constraints, the
+    last delivered partition vector, and the device-storage `WarmCache`
+    that lets a resubmit skip the host->device re-upload. Deltas apply to
+    ``hg`` at `resubmit()` time — before the request enters the queue — so
+    a watchdog requeue can never double-apply them."""
+    hg: HostHypergraph
+    omega: int
+    delta: int
+    parts: np.ndarray
+    cache: WarmCache
 
 
 class PartitionService:
@@ -183,6 +208,9 @@ class PartitionService:
             self.n_buckets += 1
         self._backlogs: dict[int, collections.deque] = {}
         self._routed: collections.deque = collections.deque()
+        self._warm: collections.deque = collections.deque()
+        self._warm_state: dict = {}
+        self.drift_threshold = 0.25
         self._results: dict[int, ServiceResult] = {}
         self._next_rid = 0
         self._next_order = 0
@@ -192,13 +220,21 @@ class PartitionService:
         # pre-register the zero-valued counter series so a dump taken
         # before the first event still carries the full catalogue
         r = self.registry
-        for route in ("bucket", self._routed_route()):
+        for route in ("bucket", self._routed_route(), "warm"):
             r.counter("service.submitted", 0, route=route)
             r.counter("service.solves", 0, route=route)
             r.counter("service.requeues", 0, route=route)
             r.counter("service.stalls", 0, route=route)
         r.counter("service.bumps", 0)
         r.gauge("service.pending", 0)
+        # streaming-repartition lane catalogue (the schema test validates a
+        # dump taken before any warm solve, so the histogram pre-registers
+        # too — `Registry.histogram` is the empty-series analogue of
+        # `counter(name, 0)`)
+        r.counter("repartition.submitted", 0)
+        for mode in ("warm", "fallback-drift", "fallback-audit"):
+            r.counter("repartition.solves", 0, mode=mode)
+        r.histogram("repartition.solve_latency.s")
 
     def _routed_route(self) -> str:
         return "vcycle" if self.plan is None else "vcycle-sharded"
@@ -250,9 +286,13 @@ class PartitionService:
         return None
 
     # ----------------------------------------------------- slot scheduler
-    def submit(self, hg: HostHypergraph, omega: int, delta: int) -> int:
+    def submit(self, hg: HostHypergraph, omega: int, delta: int,
+               key=None) -> int:
         """Queue one partition request; returns a request id whose
-        `ServiceResult` `step()`/`drain()` eventually deliver."""
+        `ServiceResult` `step()`/`drain()` eventually deliver. A non-None
+        ``key`` makes the request *resumable*: once solved, the service
+        caches the solution under the key and `resubmit(key, deltas=...)`
+        routes follow-up solves through the warm repartition lane."""
         if hg.n_nodes < 1:
             raise ValueError("empty hypergraph")
         rid = self._next_rid
@@ -264,10 +304,45 @@ class PartitionService:
                        caps_exact=caps_exact, bucket_i=bucket_i,
                        order=self._next_order,
                        submitted_at=time.monotonic())
+        if key is not None:
+            req.warm_key = key
+            req.warm_key_cold = True  # first solve is cold; cached after
         self._next_order += 1
         self.registry.counter(
             "service.submitted",
             route="bucket" if bucket_i is not None else self._routed_route())
+        self._enqueue(req)
+        return rid
+
+    def resubmit(self, key, deltas=None) -> int:
+        """Queue a warm re-solve of the cached solution under ``key``:
+        apply ``deltas`` (a `GraphDelta` or a sequence) to the cached graph
+        NOW — before the request enters the queue, so a watchdog requeue
+        never double-applies — then enqueue a repartition request that
+        refines from the previous partition vector (cold fallback on drift
+        or audit failure happens inside `core.partitioner.repartition`).
+        Raises ``KeyError`` for an unknown key."""
+        from repro.core.hypergraph import GraphDelta, apply_delta, \
+            check_fits_caps
+        st = self._warm_state[key]  # KeyError -> unknown key
+        if isinstance(deltas, GraphDelta):
+            deltas = [deltas]
+        for dl in (deltas or []):
+            apply_delta(st.hg, dl)
+            if st.cache.caps is not None:
+                st.cache.d = None  # host arrays changed; rebuild lazily
+                try:
+                    check_fits_caps(st.hg, st.cache.caps)
+                except CapacityError:
+                    st.cache.invalidate()
+        rid = self._next_rid
+        self._next_rid += 1
+        req = _Request(rid=rid, hg=st.hg, omega=st.omega, delta=st.delta,
+                       caps_exact=None, bucket_i=None,
+                       order=self._next_order,
+                       submitted_at=time.monotonic(), warm_key=key)
+        self._next_order += 1
+        self.registry.counter("repartition.submitted")
         self._enqueue(req)
         return rid
 
@@ -276,7 +351,9 @@ class PartitionService:
         # queue_wait_s therefore includes its re-queue time (the first
         # attempt's wait was folded in when that attempt started)
         req.enqueued_at = time.monotonic()
-        if req.bucket_i is None:
+        if req.warm_key is not None and not req.warm_key_cold:
+            self._warm.append(req)
+        elif req.bucket_i is None:
             self._routed.append(req)
         else:
             self._backlogs.setdefault(req.bucket_i, collections.deque()
@@ -285,19 +362,27 @@ class PartitionService:
 
     @property
     def pending(self) -> int:
-        return len(self._routed) + sum(map(len, self._backlogs.values()))
+        return (len(self._routed) + len(self._warm)
+                + sum(map(len, self._backlogs.values())))
 
     def step(self) -> list[int]:
         """Run one device solve for the oldest pending work: a stacked
-        bucket batch (up to `batch_slots` requests sharing one bucket) or
-        one routed V-cycle. Returns the rids finished this step."""
+        bucket batch (up to `batch_slots` requests sharing one bucket), one
+        routed V-cycle, or one warm repartition. Returns the rids finished
+        this step."""
         lanes: list[tuple[int, object]] = [
             (dq[0].order, i) for i, dq in self._backlogs.items() if dq]
         if self._routed:
             lanes.append((self._routed[0].order, None))
+        if self._warm:
+            lanes.append((self._warm[0].order, "warm"))
         if not lanes:
             return []
-        _, pick = min(lanes)
+        _, pick = min(lanes, key=lambda t: t[0])
+        if pick == "warm":
+            req = self._warm.popleft()
+            self.registry.gauge("service.pending", self.pending)
+            return self._solve_warm(req)
         if pick is None:
             req = self._routed.popleft()
             self.registry.gauge("service.pending", self.pending)
@@ -448,6 +533,8 @@ class PartitionService:
                                     delta=req.delta)
                 r.observe("service.queue_wait.s", req.queue_wait_s,
                           route="bucket")
+                if req.warm_key is not None:
+                    self._seed_warm(req, parts)
                 self._results[req.rid] = ServiceResult(
                     rid=req.rid, parts=parts, n_parts=len(uniq),
                     n_levels=int(host["n_levels"][lane]),
@@ -474,10 +561,55 @@ class PartitionService:
         self.registry.counter("service.solves", route=route)
         self.registry.observe("service.queue_wait.s", req.queue_wait_s,
                               route=route)
+        if req.warm_key is not None:
+            self._seed_warm(req, res.parts)
         self._results[req.rid] = ServiceResult(
             rid=req.rid, parts=res.parts, n_parts=res.n_parts,
             n_levels=res.n_levels, connectivity=res.connectivity,
             cut_net=res.cut_net, audit=res.audit, route=route, bucket=None,
+            restarts=req.restarts, bumps=req.bumps,
+            queue_wait_s=req.queue_wait_s, solve_s=req.solve_s)
+        return [req.rid]
+
+    # ------------------------------------------------ warm repartition lane
+    def _seed_warm(self, req: _Request, parts: np.ndarray) -> None:
+        """Cache the just-delivered solution of a keyed request so
+        `resubmit` can warm-start from it."""
+        self._warm_state[req.warm_key] = _WarmState(
+            hg=req.hg, omega=req.omega, delta=req.delta,
+            parts=np.asarray(parts, np.int64).copy(), cache=WarmCache())
+
+    def _solve_warm(self, req: _Request) -> list[int]:
+        """One warm repartition solve: refine-only from the cached parts
+        (deltas were already applied at `resubmit` time), with
+        `core.partitioner.repartition` handling the drift / audit cold
+        fallbacks internally. Same watchdog + requeue supervision as the
+        other lanes."""
+        st = self._warm_state[req.warm_key]
+        kwargs = dict(theta=self.theta, n_cands=self.n_cands,
+                      chain_rounds=self.chain_rounds,
+                      collect_stats=self.collect_stats,
+                      drift_threshold=self.drift_threshold)
+        if self.plan is not None:
+            kwargs.update(plan=self.plan, shard_graph=self.shard_graph,
+                          race=self.race)
+        t0 = time.monotonic()
+        with otrace.span("service.solve", route="warm"):
+            res = self._attempt("warm", [req], lambda: repartition(
+                st.hg, st.parts, st.omega, st.delta, deltas=None,
+                cache=st.cache, **kwargs))
+        if res is None:
+            return []
+        r = self.registry
+        r.counter("service.solves", route="warm")
+        r.counter("repartition.solves", mode=res.mode)
+        r.observe("repartition.solve_latency.s", time.monotonic() - t0)
+        r.observe("service.queue_wait.s", req.queue_wait_s, route="warm")
+        st.parts = np.asarray(res.parts, np.int64).copy()
+        self._results[req.rid] = ServiceResult(
+            rid=req.rid, parts=res.parts, n_parts=res.n_parts,
+            n_levels=res.n_levels, connectivity=res.connectivity,
+            cut_net=res.cut_net, audit=res.audit, route="warm", bucket=None,
             restarts=req.restarts, bumps=req.bumps,
             queue_wait_s=req.queue_wait_s, solve_s=req.solve_s)
         return [req.rid]

@@ -1,0 +1,385 @@
+"""Streaming repartitioning: incremental `GraphDelta` application, the
+warm refine-only solve path, and the drift / audit cold fallbacks.
+
+Contracts pinned here:
+
+* `apply_delta` matches a plain-python oracle (pin edits, node tombstones,
+  edge delete/insert, node growth) and accumulates the drift metric.
+* A zero-delta `repartition()` is bit-identical to `refine_from()` — the
+  warm path is *exactly* standalone refinement, nothing else.
+* The warm path skips coarsening: its span tree has NO ``coarsen_level``
+  spans and the result reports ``n_levels == 0``; past the drift threshold
+  the fallback demonstrably takes the full-V-cycle branch (``coarsen_level``
+  spans present, drift reset).
+* `dist.graph.apply_delta_sharded` leaves the striped device arrays equal
+  to a fresh re-pack of the mutated host mirror (numpy oracle), keeping
+  stripe shapes; the 8-forced-device variant additionally pins warm-start
+  race=False parity on a (2, 4) mesh.
+* The service's keyed `submit`/`resubmit` routes follow-ups through the
+  warm lane and records the ``repartition.*`` series.
+"""
+import numpy as np
+import pytest
+
+from repro.core import generate, metrics
+from repro.core.hypergraph import (Caps, CapacityError, GraphDelta,
+                                   HostHypergraph, apply_delta,
+                                   check_fits_caps)
+from repro.core.partitioner import (WarmCache, _extend_parts, partition,
+                                    refine_from, repartition)
+from repro.obs import trace as otrace
+
+_GRAPH = dict(n_layers=4, width=24, fanout=6, seed=3)
+_CONSTRAINTS = dict(omega=16, delta=64, theta=4)
+
+
+def _mkgraph():
+    return generate.snn_layered(**_GRAPH)
+
+
+# --------------------------------------------------------------- delta apply
+def _edges_of(hg: HostHypergraph):
+    return [(list(map(int, hg.edge(e))), int(hg.edge_nsrc[e]),
+             float(hg.edge_w[e])) for e in range(hg.n_edges)]
+
+
+def test_apply_delta_numpy_oracle():
+    """Every delta op against a hand-evaluated plain-python oracle."""
+    hg = _mkgraph()
+    before = _edges_of(hg)
+    n0, p0 = hg.n_nodes, hg.n_pins
+    e0_pins = before[0][0]
+    dl = GraphDelta(
+        add_nodes=2,
+        del_nodes=(5,),
+        del_edges=(3, 7),
+        add_edges=((np.array([1, 2, n0], np.int32), 1, 2.5),),
+        add_pins=((0, n0 + 1),),
+        del_pins=((0, e0_pins[0]),),
+    )
+    touched = apply_delta(hg, dl)
+
+    # oracle: replay the documented order on the snapshot
+    exp = [(list(p), s, w) for p, s, w in before]
+    # del_pins first: e0_pins[0] was a source pin (nsrc decrements)
+    was_src = 0 < before[0][1]
+    exp[0] = (exp[0][0][1:], exp[0][1] - (1 if was_src else 0), exp[0][2])
+    # tombstone node 5 everywhere
+    t_tomb = 0
+    for i, (p, s, w) in enumerate(exp):
+        if 5 in p:
+            t_tomb += sum(1 for v in p if v == 5)
+            s -= sum(1 for j, v in enumerate(p) if v == 5 and j < s)
+            exp[i] = ([v for v in p if v != 5], s, w)
+    # add_pins appends as dst
+    exp[0][0].append(n0 + 1)
+    # edge deletions shift ids down
+    t_del = len(exp[3][0]) + len(exp[7][0])
+    exp = [e for i, e in enumerate(exp) if i not in (3, 7)]
+    # then insertions append
+    exp.append(([1, 2, n0], 1, 2.5))
+
+    assert hg.n_nodes == n0 + 2
+    assert _edges_of(hg) == exp
+    assert touched == 1 + t_tomb + 1 + t_del + 3
+    assert hg.drift_pins == touched
+    assert hg.drift == pytest.approx(min(1.0, touched / hg.n_pins))
+    hg.validate()
+    hg.reset_drift()
+    assert hg.drift == 0.0
+
+    # malformed deltas fail loudly, not half-silently
+    with pytest.raises(ValueError):
+        apply_delta(hg, GraphDelta(del_edges=(hg.n_edges,)))
+    with pytest.raises(ValueError):
+        apply_delta(hg, GraphDelta(del_pins=((0, 10 ** 6),)))
+
+
+def test_check_fits_caps_is_the_resize_trigger():
+    hg = _mkgraph()
+    caps = Caps.for_host(hg)
+    check_fits_caps(hg, caps)  # freshly sized: fits
+    big = np.arange(3, dtype=np.int32)
+    for _ in range(64):  # grow edges until some capacity trips
+        apply_delta(hg, GraphDelta(add_edges=((big, 1, 1.0),)))
+    with pytest.raises(CapacityError):
+        check_fits_caps(hg, caps)
+
+
+def test_perturb_delta_deterministic():
+    hg = _mkgraph()
+    d1 = generate.perturb_delta(hg, n_edges=5, seed=9)
+    d2 = generate.perturb_delta(hg, n_edges=5, seed=9)
+    assert d1.del_edges == d2.del_edges
+    assert len(d1.add_edges) == len(d1.del_edges) == 5
+    for (p1, s1, w1), (p2, s2, w2) in zip(d1.add_edges, d2.add_edges):
+        assert np.array_equal(p1, p2) and s1 == s2 and w1 == w2
+
+
+# ----------------------------------------------------------------- warm path
+def test_zero_delta_repartition_bit_identical_to_refine_from():
+    hg = _mkgraph()
+    cold = partition(hg, **_CONSTRAINTS)
+    assert cold.mode == "cold"
+
+    hg_a, hg_b = _mkgraph(), _mkgraph()
+    a = refine_from(hg_a, cold.parts, _CONSTRAINTS["omega"],
+                    _CONSTRAINTS["delta"], theta=_CONSTRAINTS["theta"])
+    b = repartition(hg_b, cold.parts, _CONSTRAINTS["omega"],
+                    _CONSTRAINTS["delta"], theta=_CONSTRAINTS["theta"])
+    assert b.mode == "warm" and b.n_levels == 0
+    assert np.array_equal(a.parts, b.parts)
+    assert a.audit == b.audit
+    # warm quality never regresses below the audit bar of the cold solve
+    assert b.audit["size_ok"] and b.audit["inbound_ok"]
+
+
+def test_warm_path_skips_coarsening_span_tree():
+    hg = _mkgraph()
+    cold = partition(hg, **_CONSTRAINTS)
+    otrace.reset()
+    res = repartition(_mkgraph(), cold.parts, _CONSTRAINTS["omega"],
+                      _CONSTRAINTS["delta"], theta=_CONSTRAINTS["theta"],
+                      deltas=generate.perturb_delta(_mkgraph(), 3, seed=1),
+                      drift_threshold=0.9)
+    assert res.mode == "warm"
+    assert res.n_levels == 0
+    root = otrace.last_root()
+    assert root.name == "partition"
+    assert not root.find("coarsen_level")  # no coarsening, by construction
+    assert root.find("refine_level")
+    assert res.kernel_path["coarsen"] == []
+    assert res.timings["coarsen"] == 0.0
+    # level_stats carry the single refined level
+    assert len(res.level_stats) == 1
+
+
+def test_drift_fallback_takes_full_vcycle_branch():
+    hg = _mkgraph()
+    cold = partition(hg, **_CONSTRAINTS)
+    hg2 = _mkgraph()
+    dl = generate.perturb_delta(hg2, n_edges=4, seed=1)
+    otrace.reset()
+    res = repartition(hg2, cold.parts, _CONSTRAINTS["omega"],
+                      _CONSTRAINTS["delta"], theta=_CONSTRAINTS["theta"],
+                      deltas=dl, drift_threshold=0.0)
+    assert res.mode == "fallback-drift"
+    assert res.n_levels > 0
+    assert otrace.last_root().find("coarsen_level")  # the cold branch ran
+    assert hg2.drift == 0.0  # cold solve consolidates: drift resets
+    assert res.audit["size_ok"] and res.audit["inbound_ok"]
+
+
+def test_audit_fallback():
+    """A warm start that refinement cannot repair (every node in one
+    partition: k=1 admits no moves, so the size audit fails) must take the
+    fallback-audit branch and return a valid cold solution."""
+    hg = _mkgraph()
+    res = repartition(hg, np.zeros(hg.n_nodes, np.int64),
+                      _CONSTRAINTS["omega"], _CONSTRAINTS["delta"],
+                      theta=_CONSTRAINTS["theta"])
+    assert res.mode == "fallback-audit"
+    assert res.n_levels > 0
+    assert res.audit["size_ok"] and res.audit["inbound_ok"]
+    assert hg.drift == 0.0
+
+
+def test_warm_cache_reuse_and_node_growth():
+    hg = _mkgraph()
+    cold = partition(hg, **_CONSTRAINTS)
+    cache = WarmCache()
+    r1 = repartition(hg, cold.parts, _CONSTRAINTS["omega"],
+                     _CONSTRAINTS["delta"], theta=_CONSTRAINTS["theta"],
+                     cache=cache)
+    assert r1.mode == "warm"
+    assert cache.caps is not None and cache.d is not None
+    d_before = cache.d
+    # second zero-delta warm solve reuses the cached device graph object
+    r2 = repartition(hg, r1.parts, _CONSTRAINTS["omega"],
+                     _CONSTRAINTS["delta"], theta=_CONSTRAINTS["theta"],
+                     cache=cache)
+    assert r2.mode == "warm" and cache.d is d_before
+
+    # a delta that adds nodes: prev_parts extends by least-loaded placement
+    n0 = hg.n_nodes
+    dl = GraphDelta(add_nodes=3,
+                    add_edges=((np.array([0, n0, n0 + 1], np.int32),
+                                1, 1.0),))
+    r3 = repartition(hg, r2.parts, _CONSTRAINTS["omega"],
+                     _CONSTRAINTS["delta"], theta=_CONSTRAINTS["theta"],
+                     deltas=dl, drift_threshold=0.9, cache=cache)
+    assert r3.mode == "warm"
+    assert len(r3.parts) == n0 + 3
+
+
+def test_extend_parts_least_loaded():
+    prev = np.array([0, 0, 0, 1], np.int64)
+    out = _extend_parts(prev, 6, 2)
+    assert np.array_equal(out[:4], prev)
+    # loads (3,1): both new nodes flow to partition 1 (then tie -> 0? no:
+    # after one add loads are (3,2), still least-loaded is 1)
+    assert out[4] == 1 and out[5] == 1
+
+
+# ------------------------------------------------------------- sharded delta
+def test_apply_delta_sharded_oracle_single_device():
+    """Numpy oracle on a 1x1 mesh (runs everywhere): after
+    `apply_delta_sharded` the striped device arrays equal a fresh re-pack
+    of the mutated host mirror, and stripe shapes hold."""
+    import jax
+    from repro.core.hypergraph import packed_host_arrays
+    from repro.dist import graph as dist_graph
+    from repro.dist.sharding import Plan
+
+    n = len(jax.devices())
+    mesh = jax.make_mesh((1, n), ("data", "model"))
+    plan = Plan.make(mesh)
+    hg, hg_ref = _mkgraph(), _mkgraph()
+    caps = Caps.for_host(hg)
+    sh = dist_graph.sharded_from_host(hg, caps, plan)
+    dl = generate.perturb_delta(hg, n_edges=4, seed=5)
+
+    sh2 = dist_graph.apply_delta_sharded(sh, hg, dl, caps, plan)
+    apply_delta(hg_ref, dl)
+    assert hg.drift == hg_ref.drift > 0.0
+    ptot = dist_graph.stripe_total(caps, n)
+    ref = packed_host_arrays(hg_ref, caps, pcap=ptot)
+    for f in dist_graph.PINS_FIELDS:
+        got = np.asarray(getattr(sh2.g, f))
+        assert got.shape[0] == ptot, f
+        assert np.array_equal(got, ref[f]), f
+    for f in ("edge_off", "edge_nsrc", "edge_w", "node_off", "node_nin",
+              "node_size"):
+        np.testing.assert_array_equal(np.asarray(getattr(sh2.g, f)),
+                                      ref[f], err_msg=f)
+
+    # capacity overflow raises BEFORE device state changes, host mirror
+    # stays mutated (the caller rebuilds at fresh caps)
+    big = GraphDelta(add_edges=tuple(
+        (np.arange(3, dtype=np.int32) + i % 7, 1, 1.0)
+        for i in range(2 * caps.e)))
+    e_before = hg.n_edges
+    with pytest.raises(CapacityError):
+        dist_graph.apply_delta_sharded(sh2, hg, big, caps, plan)
+    assert hg.n_edges == e_before + 2 * caps.e
+
+
+# -------------------------------------------------------------------- kway
+def test_repartition_kway_warm_and_pinned_ids():
+    from repro.core.kway import partition_kway, repartition_kway
+
+    hg = _mkgraph()
+    cold = partition_kway(hg, k=4, theta=4)
+    assert "pins" in cold.kernel_path  # shared refine loop reports pins too
+    dl = generate.perturb_delta(hg, n_edges=4, seed=2)
+    warm = repartition_kway(hg, cold.parts, k=4, deltas=dl,
+                            drift_threshold=0.9, theta=4)
+    assert warm.mode == "warm" and warm.n_levels == 0
+    assert warm.n_parts == 4  # pinned id space, no compaction
+    assert warm.audit["size_ok"]
+    assert "balance_eps" in warm.audit
+    fb = repartition_kway(hg, warm.parts, k=4,
+                          deltas=generate.perturb_delta(hg, 4, seed=3),
+                          drift_threshold=0.0, theta=4)
+    assert fb.mode == "fallback-drift" and fb.n_levels > 0
+
+
+# ------------------------------------------------------------------ service
+def test_service_warm_lane():
+    from repro.serve.partition_service import PartitionService
+
+    svc = PartitionService(batch_slots=2, route_threshold=2048, theta=4)
+    try:
+        hg = _mkgraph()
+        rid0 = svc.submit(hg, _CONSTRAINTS["omega"], _CONSTRAINTS["delta"],
+                          key="tenant-a")
+        out0 = svc.drain()
+        assert out0[rid0].route in ("bucket", "vcycle")
+
+        dl = generate.perturb_delta(hg, n_edges=3, seed=4)
+        rid1 = svc.resubmit("tenant-a", deltas=dl)
+        out1 = svc.drain()
+        assert out1[rid1].route == "warm"
+        assert out1[rid1].n_levels == 0  # refine-only, no coarsening
+        assert out1[rid1].audit["size_ok"] and out1[rid1].audit["inbound_ok"]
+
+        r = svc.registry
+        assert r.value("repartition.submitted") == 1
+        assert r.value("repartition.solves", mode="warm") == 1
+        snap = r.snapshot()
+        assert "repartition.solve_latency.s" in snap["histograms"]
+        lat = snap["histograms"]["repartition.solve_latency.s"]
+        assert sum(s["count"] for s in lat) == 1
+
+        with pytest.raises(KeyError):
+            svc.resubmit("nobody")
+    finally:
+        svc.close()
+
+
+def test_service_warm_metrics_preregistered():
+    """A dump taken before any warm solve still carries the repartition
+    catalogue (the schema test validates exactly this shape)."""
+    from repro.serve.partition_service import PartitionService
+
+    svc = PartitionService()
+    snap = svc.registry.snapshot()
+    assert "repartition.submitted" in snap["counters"]
+    modes = {s["labels"]["mode"]
+             for s in snap["counters"]["repartition.solves"]}
+    assert modes == {"warm", "fallback-drift", "fallback-audit"}
+    hist = snap["histograms"]["repartition.solve_latency.s"]
+    assert len(hist) == 1 and hist[0]["count"] == 0
+    svc.close()
+
+
+# --------------------------------------------------------------- forced-8dev
+@pytest.mark.slow
+def test_repartition_sharded_parity_inprocess_8dev():
+    """Warm-start parity on real meshes (CI's forced-8 step): with race
+    off, a sharded zero-delta `repartition` on (2, 4) and (1, 8) meshes is
+    bit-identical to the single-device warm solve, and the sharded
+    delta-apply path feeds a warm solve that matches a host-rebuilt one."""
+    import jax
+
+    if len(jax.devices()) < 8:
+        pytest.skip("needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    from repro.dist import graph as dist_graph
+    from repro.dist.sharding import Plan
+
+    hg = _mkgraph()
+    cold = partition(hg, **_CONSTRAINTS)
+    r_host = repartition(_mkgraph(), cold.parts, _CONSTRAINTS["omega"],
+                         _CONSTRAINTS["delta"], theta=_CONSTRAINTS["theta"])
+    assert r_host.mode == "warm"
+    for shape in ((2, 4), (1, 8)):
+        plan = Plan.make(jax.make_mesh(shape, ("data", "model")))
+        r_mesh = repartition(_mkgraph(), cold.parts, _CONSTRAINTS["omega"],
+                             _CONSTRAINTS["delta"],
+                             theta=_CONSTRAINTS["theta"], plan=plan,
+                             race=False, shard_graph=True)
+        assert r_mesh.mode == "warm", shape
+        assert np.array_equal(r_host.parts, r_mesh.parts), shape
+        assert r_host.audit == r_mesh.audit, shape
+
+    # sharded incremental path: cache holds ShardedHypergraph, the delta
+    # applies by stripe-local scatters, and the warm solve from the
+    # scattered storage matches the host-rebuilt warm solve bit-for-bit
+    plan = Plan.make(jax.make_mesh((2, 4), ("data", "model")))
+    hg_s, hg_h = _mkgraph(), _mkgraph()
+    caps = Caps.for_host(hg_s)
+    cache = WarmCache(caps=caps,
+                      d=dist_graph.sharded_from_host(hg_s, caps, plan))
+    dl = generate.perturb_delta(hg_s, n_edges=4, seed=5)
+    r_s = repartition(hg_s, cold.parts, _CONSTRAINTS["omega"],
+                      _CONSTRAINTS["delta"], theta=_CONSTRAINTS["theta"],
+                      deltas=dl, drift_threshold=0.9, cache=cache,
+                      plan=plan, race=False, shard_graph=True)
+    assert r_s.mode == "warm"
+    assert isinstance(cache.d, dist_graph.ShardedHypergraph)
+    dl_h = generate.perturb_delta(hg_h, n_edges=4, seed=5)
+    r_h = repartition(hg_h, cold.parts, _CONSTRAINTS["omega"],
+                      _CONSTRAINTS["delta"], theta=_CONSTRAINTS["theta"],
+                      deltas=dl_h, drift_threshold=0.9)
+    assert np.array_equal(r_s.parts, r_h.parts)
+    assert r_s.audit == r_h.audit
